@@ -1,0 +1,74 @@
+"""Paper Fig. 17 (right): convolution computation flow —
+Gather-MatMul-Scatter vs Fetch-on-Demand.
+
+Measures wall time of both XLA flows + the Pallas FoD kernel (interpret
+mode), and derives the paper's real claim: DRAM traffic.  The analytic
+traffic model matches paper §4.2.3 / Fig. 11c:
+  G-M-S: read features per map entry, write gathered matrix, read it back
+         for the GEMM, write psums, read psums for scatter, write output.
+  FoD:   read features once per (cached) access, accumulate psums on-chip,
+         write output once.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import mapping as M
+from repro.core import sparseconv as SC
+from repro.data.synthetic import lidar_scene
+
+
+def traffic_model(maps, n_points, cin, cout, dtype_bytes=4):
+    n_maps = int(jnp.sum(maps.valid))
+    feat = cin * dtype_bytes
+    psum = cout * dtype_bytes
+    gms = (n_maps * feat          # gather reads
+           + n_maps * feat        # gathered matrix write
+           + n_maps * feat        # GEMM read
+           + n_maps * psum * 2    # psum write + scatter read
+           + n_points * psum)     # output write
+    fod = (n_maps * feat          # fetch-on-demand reads (uncached)
+           + n_points * psum)     # output write (psums stay on-chip)
+    return gms, fod, n_maps
+
+
+def run(n_points=4096, cin=64, cout=64):
+    coords_np, mask_np, _ = lidar_scene(1, n_points, grid=64)
+    pc = M.make_point_cloud(jnp.asarray(coords_np), jnp.asarray(mask_np))
+    rng = np.random.default_rng(0)
+    feats = jnp.asarray(rng.normal(size=(n_points, cin)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(27, cin, cout)).astype(np.float32))
+    maps, out_pc = M.build_conv_maps(pc, 3, 1)
+
+    gms = jax.jit(lambda f, w: SC.gather_matmul_scatter(
+        f, maps, w, out_pc.capacity))
+    fod = jax.jit(lambda f, w: SC.fetch_on_demand(
+        f, maps, w, out_pc.capacity))
+    us_gms = timeit(gms, feats, w)
+    us_fod = timeit(fod, feats, w)
+
+    from repro.kernels.spconv import ops as spops
+    pall = jax.jit(lambda f, w: spops.sparse_conv_fod(
+        f, maps, w, out_pc.capacity))
+    us_pal = timeit(pall, feats, w)
+
+    t_gms, t_fod, n_maps = traffic_model(maps, n_points, cin, cout)
+    emit(f"convflow/gms_n{n_points}_c{cin}", us_gms,
+         f"dram_bytes={t_gms}")
+    emit(f"convflow/fod_n{n_points}_c{cin}", us_fod,
+         f"dram_bytes={t_fod};traffic_saving={t_gms / t_fod:.2f}x")
+    emit(f"convflow/pallas_fod_n{n_points}_c{cin}", us_pal,
+         f"interpret_mode=1;maps={n_maps}")
+
+
+def main():
+    run(2048, 32, 32)
+    run(4096, 64, 64)
+
+
+if __name__ == "__main__":
+    main()

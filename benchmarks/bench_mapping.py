@@ -1,0 +1,81 @@
+"""Paper Fig. 17 (left): kernel mapping — mergesort-based (PointAcc) vs
+hash-table-based (state-of-the-art GPU baseline).
+
+The paper's finding: on CPU/GPU the mergesort algorithm is *slower* than
+hashing, but it parallelises into a 14x-smaller circuit; on TPU the story
+repeats as 'sort-based maps onto XLA's native sorting network, hashing
+vectorises terribly'.  We measure both on synthetic LiDAR scenes:
+  * sort    — repro.core.mapping.kernel_map (lax.sort + adjacent equality)
+  * hash    — dict-based point lookup (the CPU implementation of [35])
+  * bruteforce — O(N*M) coordinate-equality matching, the naive vector form
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import mapping as M
+from repro.data.synthetic import lidar_scene
+
+
+def hash_kernel_map(coords, mask, out_coords, out_mask, offsets):
+    table = {tuple(c): i for i, c in enumerate(coords) if mask[i]}
+    n_maps = 0
+    for d in offsets:
+        for j, q in enumerate(out_coords):
+            if out_mask[j]:
+                p = (q[0], q[1] + d[0], q[2] + d[1], q[3] + d[2])
+                if p in table:
+                    n_maps += 1
+    return n_maps
+
+
+def bruteforce_kernel_map(coords, mask, offsets_full):
+    # (K, N, M) equality over coordinates, vectorised
+    shifted = coords[None] - offsets_full[:, None]           # (K, N, 4)
+    eq = (shifted[:, :, None, :] == coords[None, None]).all(-1)
+    eq &= (mask[None, :, None] & mask[None, None, :])
+    return eq.sum()
+
+
+def run(n_points: int = 4096):
+    coords_np, mask_np, _ = lidar_scene(0, n_points, grid=64)
+    pc = M.make_point_cloud(jnp.asarray(coords_np), jnp.asarray(mask_np))
+
+    kmap = jax.jit(lambda c, m: M.kernel_map(
+        M.PointCloud(c, m, 1), M.PointCloud(c, m, 1), 3))
+    us_sort = timeit(kmap, pc.coords, pc.mask)
+    maps = kmap(pc.coords, pc.mask)
+    n_maps = int(jnp.sum(maps.valid))
+    emit(f"mapping/sort_n{n_points}", us_sort, f"maps={n_maps}")
+
+    offs = M.kernel_offsets(3, 3, 1)
+    import time
+    t0 = time.perf_counter()
+    n_hash = hash_kernel_map(coords_np, mask_np, coords_np, mask_np, offs)
+    us_hash = (time.perf_counter() - t0) * 1e6
+    emit(f"mapping/hash_n{n_points}", us_hash, f"maps={n_hash}")
+    assert n_hash == n_maps, (n_hash, n_maps)
+
+    if n_points <= 4096:
+        offs_full = jnp.asarray(
+            np.concatenate([np.zeros((27, 1), np.int32), offs], 1))
+        bf = jax.jit(bruteforce_kernel_map)
+        us_bf = timeit(bf, pc.coords, pc.mask, offs_full)
+        emit(f"mapping/bruteforce_n{n_points}", us_bf,
+             f"speedup_vs_bf={us_bf / us_sort:.1f}x")
+
+    emit(f"mapping/summary_n{n_points}", us_sort,
+         f"sort_vs_hash={us_hash / us_sort:.2f}x")
+
+
+def main():
+    for n in (1024, 4096, 16384):
+        run(n)
+
+
+if __name__ == "__main__":
+    main()

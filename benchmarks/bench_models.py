@@ -1,0 +1,89 @@
+"""Paper Figs. 13/14: end-to-end latency across the 8 paper networks.
+
+Without silicon we can't reproduce absolute speedups over a 2080Ti; what we
+reproduce is the paper's *relative* story on this host:
+  * all 8 benchmarks run end to end through the same framework;
+  * for the SparseConv models, the PointAcc flow (FoD + ranking-based maps)
+    vs the baseline flow (G-M-S) — the architectural delta the paper
+    credits for its gains;
+  * the Fig. 16 co-design point: MinkowskiUNet vs Mini-MinkowskiUNet
+    latency at equal input.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import mapping as M
+from repro.data.synthetic import dense_xyz_batch, lidar_scene
+from repro.models import minkunet as MU
+from repro.models import pointnets as PN
+
+N, B = 512, 2
+
+
+def bench_pointnet_family():
+    xyz_np, mask_np, _ = dense_xyz_batch(0, 0, B, N)
+    xyz, mask = jnp.asarray(xyz_np), jnp.asarray(mask_np)
+    key = jax.random.key(0)
+
+    nets = {
+        "pointnet": (PN.pointnet_init(key, 40),
+                     lambda p: PN.pointnet_apply(p, xyz, mask)),
+        "pointnet++(c)": (PN.pointnetpp_cls_init(key, 40),
+                          lambda p: PN.pointnetpp_cls_apply(
+                              p, xyz, mask, n1=128, n2=32)),
+        "pointnet++(s)": (PN.pointnetpp_seg_init(key, 13),
+                          lambda p: PN.pointnetpp_seg_apply(
+                              p, xyz, mask, n1=128, n2=32)),
+        "pointnet++(ps)": (PN.pointnetpp_seg_init(key, 50),
+                           lambda p: PN.pointnetpp_seg_apply(
+                               p, xyz, mask, n1=128, n2=32)),
+        "dgcnn": (PN.dgcnn_init(key, 16),
+                  lambda p: PN.dgcnn_apply(p, xyz, mask, k=16)),
+        "f-pointnet++": (PN.fpointnetpp_init(key),
+                         lambda p: PN.fpointnetpp_apply(p, xyz, mask)),
+    }
+    for name, (params, fn) in nets.items():
+        jfn = jax.jit(fn)
+        us = timeit(jfn, params)
+        emit(f"models/{name}_n{N}", us,
+             f"points_per_s={B * N / (us / 1e6):.0f}")
+
+
+def bench_minknet():
+    coords, mask, feats = lidar_scene(3, 2048, grid=48)
+    pc = M.make_point_cloud(jnp.asarray(coords), jnp.asarray(mask))
+    feats = jnp.asarray(feats)
+    key = jax.random.key(1)
+
+    full = MU.minkunet_init(key, 4, 13, stem=16, enc_planes=(16, 32, 64),
+                            dec_planes=(64, 32, 16), blocks_per_stage=1)
+    mini = MU.mini_minkunet_init(key, 4, 13)
+
+    for name, params in [("minknet", full), ("mini-minknet", mini)]:
+        for flow in ("gms", "fod"):
+            fn = jax.jit(lambda p, f: MU.minkunet_apply(
+                p, pc, f, flow=flow))
+            us = timeit(fn, params, feats)
+            emit(f"models/{name}_{flow}", us, "")
+
+    # Fig. 16 co-design ratio
+    t_full = timeit(jax.jit(
+        lambda p, f: MU.minkunet_apply(p, pc, f, flow="fod")), full, feats)
+    t_mini = timeit(jax.jit(
+        lambda p, f: MU.minkunet_apply(p, pc, f, flow="fod")), mini, feats)
+    emit("models/codesign_ratio", t_full / t_mini,
+         f"mini_speedup={t_full / t_mini:.1f}x (paper: 100x w/ silicon)")
+
+
+def main():
+    bench_pointnet_family()
+    bench_minknet()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Render the §Perf baseline-vs-optimized comparison table from the two
+dry-run sweeps."""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks.roofline_table import effective_terms, fmt_s
+
+
+def load(path):
+    with open(path) as f:
+        return {(r["arch"], r["shape"]): r for r in json.load(f)
+                if r.get("status") == "ok" and "compute_s" in r}
+
+
+def render(base_path="benchmarks/results/dryrun_baseline.json",
+           opt_path="benchmarks/results/dryrun_optimized.json"):
+    base = load(base_path)
+    opt = load(opt_path)
+    lines = [
+        "| arch | shape | max-term baseline | max-term optimized | "
+        "improvement | dominant (b -> o) |",
+        "|---|---|---|---|---|---|",
+    ]
+    gains = []
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        tb, db = effective_terms(base[key])
+        to, do = effective_terms(opt[key])
+        mb = max(tb.values())
+        mo = max(to.values())
+        gain = mb / mo if mo > 0 else float("inf")
+        gains.append(gain)
+        lines.append(
+            f"| {key[0]} | {key[1]} | {fmt_s(mb)} | {fmt_s(mo)} | "
+            f"**{gain:.2f}x** | {db} -> {do} |")
+    if gains:
+        import statistics
+        lines.append(
+            f"\ngeometric-mean improvement on the dominant term across "
+            f"{len(gains)} cells: "
+            f"**{statistics.geometric_mean(gains):.2f}x**")
+    return "\n".join(lines)
+
+
+def main():
+    print(render(*(sys.argv[1:] or [])))
+
+
+if __name__ == "__main__":
+    main()

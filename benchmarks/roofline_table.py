@@ -1,0 +1,72 @@
+"""Render the §Roofline table (EXPERIMENTS.md) from the dry-run JSON."""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def fmt_s(v):
+    if v is None:
+        return "-"
+    if v >= 1.0:
+        return f"{v:.2f}s"
+    if v >= 1e-3:
+        return f"{v * 1e3:.1f}ms"
+    return f"{v * 1e6:.0f}us"
+
+
+PEAK = 197e12
+
+
+def effective_terms(r):
+    """compute term = max(analytic, HLO) per-chip flops: analytic covers
+    inner-scan undercount, HLO covers replication redundancy the analytic
+    model assumes away (e.g. unshardable-head attention)."""
+    comp = max(r["analytic_flops"] / r["chips"],
+               r.get("hlo_flops_per_chip", 0.0)) / PEAK
+    terms = {"compute_s": comp, "memory_s": r["memory_s"],
+             "collective_s": r["collective_s"]}
+    dom = max(terms, key=terms.get).replace("_s", "")
+    return terms, dom
+
+
+def render(path="benchmarks/results/dryrun_single_pod.json",
+           out=None):
+    with open(path) as f:
+        rows = json.load(f)
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "MODEL_FLOPS/analytic | bytes/chip(params) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("status") == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skipped | "
+                f"{r['reason'][:52]} | — |")
+            continue
+        if r.get("status") != "ok" or "compute_s" not in r:
+            continue
+        t, dom = effective_terms(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(t['compute_s'])} | "
+            f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+            f"**{dom}** | {r['useful_flops_ratio']:.2f} | "
+            f"{r['param_bytes_per_device'] / 1e9:.2f}GB |")
+    text = "\n".join(lines)
+    if out:
+        with open(out, "w") as f:
+            f.write(text + "\n")
+    return text
+
+
+def main():
+    print(render(*(sys.argv[1:] or [])))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+  bench_mapping   Fig. 17-left   sort-merge vs hash kernel mapping
+  bench_convflow  Fig. 17-right  Gather-MatMul-Scatter vs Fetch-on-Demand
+  bench_cache     Fig. 18/19     MMU configurable cache: miss rate / DRAM
+  bench_fusion    Fig. 20        temporal layer fusion DRAM reduction
+  bench_models    Figs. 13/14/16 the 8 paper networks + co-design point
+  bench_moe       beyond-paper   PointAcc dispatch on MoE routing
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline terms come from the
+dry-run (see launch/dryrun.py + roofline_table.py), not from here — this
+container has no TPU to time.
+"""
+
+import sys
+import traceback
+
+from benchmarks.common import header
+
+
+def main() -> None:
+    header()
+    from benchmarks import (bench_cache, bench_convflow, bench_fusion,
+                            bench_mapping, bench_models, bench_moe)
+    failed = []
+    for mod in (bench_mapping, bench_convflow, bench_cache, bench_fusion,
+                bench_models, bench_moe):
+        try:
+            mod.main()
+        except Exception:
+            failed.append(mod.__name__)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

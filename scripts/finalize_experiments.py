@@ -1,0 +1,49 @@
+"""Inject the final dry-run tables into EXPERIMENTS.md.
+
+Run after the baseline/optimized/multi-pod sweeps complete:
+  PYTHONPATH=src:. python scripts/finalize_experiments.py
+"""
+
+import json
+import re
+import sys
+
+sys.path.insert(0, ".")
+
+from benchmarks.perf_compare import render as render_compare
+from benchmarks.roofline_table import render as render_roofline
+
+
+def summarize_multi_pod(path):
+    try:
+        with open(path) as f:
+            rows = json.load(f)
+    except FileNotFoundError:
+        return None
+    ok = sum(1 for r in rows if r.get("status") == "ok")
+    skip = sum(1 for r in rows if r.get("status") == "skipped")
+    err = sum(1 for r in rows if r.get("status") == "error")
+    return f"{ok} ok / {skip} skipped (noted) / {err} errors"
+
+
+def main():
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+
+    roof = render_roofline("benchmarks/results/dryrun_baseline.json")
+    text = text.replace("<!-- ROOFLINE_TABLE -->", roof)
+
+    comp = render_compare()
+    text = text.replace("<!-- OPTIMIZED_TABLE -->", comp)
+
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated")
+    mp = summarize_multi_pod(
+        "benchmarks/results/dryrun_multi_pod_final.json")
+    if mp:
+        print("multi-pod final:", mp)
+
+
+if __name__ == "__main__":
+    main()

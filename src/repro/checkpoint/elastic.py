@@ -1,0 +1,61 @@
+"""Elastic restart: resume a run on a different mesh than it was saved on.
+
+Checkpoints store full (unsharded) logical arrays, so resharding is just
+`device_put` onto the new mesh's NamedShardings — the restore path in
+store.py already does that.  What this module adds is the policy layer:
+
+  * pick the newest committed step;
+  * rebuild shardings for the *surviving* mesh (e.g. 512 -> 256 chips after
+    losing a pod, or 256 -> 512 when capacity returns);
+  * rescale the data pipeline offset so no batch is skipped or repeated
+    (global step x global batch is mesh-independent);
+  * validate divisibility (global batch % new data-parallel size).
+
+At 1000+ nodes the same flow runs per-host against a shared filesystem /
+object store; only `_gather_for_save`/restore IO changes (per-host shard
+files), not this logic.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.checkpoint import store
+from repro.distributed import sharding as SH
+from repro.train import optim as OPT
+
+
+def resume_or_init(root: str, init_fn, sc: SH.ShardingConfig,
+                   global_batch: int) -> Tuple[Any, Any, int]:
+    """Returns (params, opt_state, start_step); initialises fresh if no
+    committed checkpoint exists."""
+    if global_batch % sc.n_data != 0:
+        raise ValueError(
+            f"global batch {global_batch} not divisible by the new mesh's "
+            f"data-parallel size {sc.n_data}; choose a compatible mesh")
+
+    step = store.latest_step(root)
+    param_shapes = jax.eval_shape(init_fn)
+    opt_shapes = jax.eval_shape(OPT.init, param_shapes)
+    p_sh = SH.params_shardings(param_shapes, sc)
+    opt_sh = OPT.OptState(step=SH.replicated(sc), m=p_sh, v=p_sh)
+
+    if step is None:
+        params = jax.jit(init_fn, out_shardings=p_sh)()
+        opt_state = jax.jit(OPT.init, out_shardings=opt_sh)(params)
+        return params, opt_state, 0
+
+    params = store.restore(root, step, param_shapes, p_sh)
+    opt_state = store.restore(
+        root + "/opt", step, opt_shapes, opt_sh) \
+        if store.latest_step(root + "/opt") == step else \
+        jax.jit(OPT.init, out_shardings=opt_sh)(params)
+    return params, opt_state, step
+
+
+def save_state(root: str, step: int, params, opt_state,
+               extra: Optional[dict] = None):
+    store.save(root, step, params, extra)
+    store.save(root + "/opt", step, opt_state, extra)

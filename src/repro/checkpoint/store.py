@@ -1,0 +1,194 @@
+"""Sharded checkpointing with atomic commit and async write.
+
+Layout:
+    <root>/step_<N>/
+        manifest.json          # tree structure, shapes, dtypes, mesh info
+        <flat-key>.npy         # one file per leaf
+        COMMIT                 # written last -> marks the step complete
+
+Fault-tolerance contract:
+  * a checkpoint is valid iff COMMIT exists (partial writes from a killed
+    process are ignored and garbage-collected on the next save);
+  * `latest_step()` finds the newest valid step, so restart-after-crash is
+    `restore(latest_step())`;
+  * saves run on a background thread (training never blocks on disk);
+  * restore accepts a different mesh/sharding than save used: arrays are
+    `device_put` onto the new sharding (elastic restart — see elastic.py).
+
+Multi-host note: on a real cluster each host writes only the shards it
+addresses (`arr.addressable_shards`) into per-host subdirs and host 0 writes
+the manifest; this single-process implementation writes full arrays, and the
+multi-host path is isolated in `_gather_for_save` for the cluster port.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import re
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "__"
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat[0]:
+        keys = []
+        for k in path:
+            if hasattr(k, "key"):
+                keys.append(str(k.key))
+            elif hasattr(k, "name"):
+                keys.append(str(k.name))
+            elif hasattr(k, "idx"):
+                keys.append(str(k.idx))
+        out[_SEP.join(keys)] = leaf
+    return out, flat[1]
+
+
+def _gather_for_save(x) -> np.ndarray:
+    """Single-process: full array.  Multi-host port: write
+    x.addressable_shards per host instead."""
+    return np.asarray(jax.device_get(x))
+
+
+def save(root: str, step: int, tree: Any, extra: Optional[dict] = None):
+    """Synchronous atomic save."""
+    step_dir = os.path.join(root, f"step_{step:08d}")
+    tmp_dir = step_dir + ".tmp"
+    if os.path.exists(tmp_dir):
+        shutil.rmtree(tmp_dir)
+    os.makedirs(tmp_dir, exist_ok=True)
+
+    flat, _ = _flatten(tree)
+    manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+    for key, leaf in flat.items():
+        arr = _gather_for_save(leaf)
+        dtype = str(arr.dtype)
+        if arr.dtype.kind == "V" or dtype not in np.sctypeDict:
+            # ml_dtypes (bfloat16, fp8...) don't survive np.save/np.load:
+            # store raw bits, record the logical dtype in the manifest
+            arr = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+        np.save(os.path.join(tmp_dir, key + ".npy"), arr)
+        manifest["leaves"][key] = {"shape": list(arr.shape),
+                                   "dtype": dtype}
+    with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    # atomic commit: rename then marker
+    if os.path.exists(step_dir):
+        shutil.rmtree(step_dir)
+    os.rename(tmp_dir, step_dir)
+    with open(os.path.join(step_dir, "COMMIT"), "w") as f:
+        f.write(str(time.time()))
+    return step_dir
+
+
+def latest_step(root: str) -> Optional[int]:
+    if not os.path.isdir(root):
+        return None
+    best = None
+    for name in os.listdir(root):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(root, name, "COMMIT")):
+            best = max(best or -1, int(m.group(1)))
+    return best
+
+
+def restore(root: str, step: int, like: Any, shardings: Any = None) -> Any:
+    """Restore into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs).  If `shardings` is given, leaves are device_put onto
+    it — this is what makes restarts elastic across mesh changes."""
+    step_dir = os.path.join(root, f"step_{step:08d}")
+    if not os.path.exists(os.path.join(step_dir, "COMMIT")):
+        raise FileNotFoundError(f"no committed checkpoint at {step_dir}")
+    flat_like, treedef = _flatten(like)
+    flat_sh = _flatten(shardings)[0] if shardings is not None else {}
+
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves = {}
+    for key, leaf in flat_like.items():
+        arr = np.load(os.path.join(step_dir, key + ".npy"))
+        logical = manifest["leaves"].get(key, {}).get("dtype")
+        if logical and str(arr.dtype) != logical:
+            arr = arr.view(np.dtype(logical))      # bf16/fp8 raw bits
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        if key in flat_sh:
+            leaves[key] = jax.device_put(arr, flat_sh[key])
+        else:
+            leaves[key] = jnp.asarray(arr)
+    ordered = [leaves[k] for k in flat_like]
+    return jax.tree_util.tree_unflatten(treedef, ordered)
+
+
+def read_manifest(root: str, step: int) -> dict:
+    with open(os.path.join(root, f"step_{step:08d}", "manifest.json")) as f:
+        return json.load(f)
+
+
+class CheckpointManager:
+    """Async, bounded-retention checkpoint writer."""
+
+    def __init__(self, root: str, keep: int = 3, interval_steps: int = 100):
+        self.root = root
+        self.keep = keep
+        self.interval = interval_steps
+        self._q: queue.Queue = queue.Queue(maxsize=1)
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+        self._last_saved = -1
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree, extra = item
+            save(self.root, step, tree, extra)
+            self._gc()
+
+    def _gc(self):
+        steps = sorted(
+            int(m.group(1)) for m in
+            (re.fullmatch(r"step_(\d+)", n)
+             for n in os.listdir(self.root)) if m)
+        for s in steps[:-self.keep]:
+            d = os.path.join(self.root, f"step_{s:08d}")
+            if os.path.exists(os.path.join(d, "COMMIT")):
+                shutil.rmtree(d, ignore_errors=True)
+
+    def maybe_save(self, step: int, tree: Any, extra: Optional[dict] = None,
+                   force: bool = False):
+        if not force and (step % self.interval or step == self._last_saved):
+            return False
+        # snapshot to host BEFORE queuing (donated buffers may be reused)
+        host_tree = jax.tree_util.tree_map(_gather_for_save, tree)
+        try:
+            self._q.put_nowait((step, host_tree, extra))
+        except queue.Full:
+            self._q.get()      # drop the older pending save
+            self._q.put((step, host_tree, extra))
+        self._last_saved = step
+        return True
+
+    def wait(self):
+        self._q.join() if False else None
+        while not self._q.empty():
+            time.sleep(0.05)
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._worker.join(timeout=10)

@@ -1,0 +1,6 @@
+"""Architecture configs: the 10 assigned archs + the paper's own models.
+
+Use `repro.configs.get(name)` / `repro.configs.list_archs()`.
+"""
+
+from repro.configs.base import ArchConfig, get, list_archs, register

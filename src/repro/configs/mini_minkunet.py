@@ -1,0 +1,15 @@
+"""Mini-MinkowskiUNet: the paper's co-designed light model (Fig. 16)."""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(
+    ArchConfig(
+        name="mini-minkunet", family="pointcloud",
+        n_layers=4, d_model=16,
+        notes="paper §5.2.2 co-design: shallow/narrow MinkowskiUNet",
+    ),
+    reduced=ArchConfig(
+        name="mini-minkunet", family="pointcloud",
+        n_layers=4, d_model=8,
+    ),
+)

@@ -1,0 +1,273 @@
+"""Ranking-based mapping operations (PointAcc Mapping Unit, paper §4.1).
+
+PointAcc's key insight: every mapping operation a point-cloud network needs
+(kernel mapping, k-nearest-neighbours, ball query, farthest-point sampling,
+coordinate quantization) can be expressed through *ranking* primitives —
+MergeSort / TopK / Max over coordinate or distance keys — instead of hash
+tables.  Hash tables need random parallel SRAM access (an O(N^2) crossbar in
+silicon); sorting networks are log-depth and fully parallel.  The same
+trade-off holds on TPU: XLA has no efficient random-access hash path, but its
+bitonic `lax.sort` *is* a sorting network.  This module is therefore a direct
+software embodiment of the paper's Mapping Unit:
+
+  * kernel mapping  -> sort-merge intersection of the (-delta)-shifted input
+                       cloud with the output cloud (paper Fig. 9), realised as
+                       one lexicographic `lax.sort` + adjacent-equality
+                       detection (paper's DetectIntersection stage).
+  * quantization    -> clearing the low log2(ts) bits of the coordinates
+                       (paper §2.1.1), i.e. arithmetic shift right then left.
+  * unique (output cloud construction) -> sort + adjacent-dedup + re-sort
+                       (compaction without dynamic shapes).
+
+All functions are jit-friendly: point clouds are fixed-capacity arrays with
+validity masks; invalid slots hold SENTINEL coordinates which sort to the end.
+
+Coordinate convention: `coords` is (N, 1+D) int32 with the batch index in
+column 0 and D spatial dims after it.  `stride` (the paper's tensor stride
+`ts`) is a static python int and always a power of two.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+# Large-but-safe sentinel: room to add kernel offsets without int32 overflow.
+SENTINEL = np.int32(2**30 - 1)
+
+
+class PointCloud(NamedTuple):
+    """A fixed-capacity, masked, sparse voxel point cloud."""
+
+    coords: jnp.ndarray  # (N, 1+D) int32; invalid rows = SENTINEL
+    mask: jnp.ndarray    # (N,) bool
+    stride: int          # static tensor stride (power of two)
+
+    @property
+    def capacity(self) -> int:
+        return self.coords.shape[0]
+
+    @property
+    def ndim_spatial(self) -> int:
+        return self.coords.shape[1] - 1
+
+    def num_valid(self) -> jnp.ndarray:
+        return jnp.sum(self.mask.astype(jnp.int32))
+
+
+class KernelMaps(NamedTuple):
+    """Input/output maps for one sparse convolution (paper's map tuples).
+
+    For each kernel offset k (the weight index w_n), row k lists the matched
+    (input index, output index) pairs, padded with -1 / valid=False.
+    """
+
+    in_idx: jnp.ndarray   # (K, cap) int32, -1 padded
+    out_idx: jnp.ndarray  # (K, cap) int32, -1 padded
+    valid: jnp.ndarray    # (K, cap) bool
+    offsets: np.ndarray   # (K, D) static numpy offsets (units of input stride)
+
+    def swap(self) -> "KernelMaps":
+        """Transpose the maps: used for transposed (up-sampling) convolution.
+
+        MinkowskiEngine-style: an upsample conv from coarse->fine reuses the
+        maps of the corresponding fine->coarse conv with in/out roles swapped
+        (and mirrored weight offsets).
+        """
+        return KernelMaps(self.out_idx, self.in_idx, self.valid,
+                          -self.offsets)
+
+
+def make_point_cloud(coords: jnp.ndarray, mask: jnp.ndarray,
+                     stride: int = 1) -> PointCloud:
+    """Normalise a raw (coords, mask) pair: sentinel-fill invalid rows."""
+    coords = jnp.where(mask[:, None], coords.astype(jnp.int32), SENTINEL)
+    return PointCloud(coords, mask, stride)
+
+
+# ---------------------------------------------------------------------------
+# Coordinate quantization (paper §2.1.1: "clearing the lowest log2(ts) bits")
+# ---------------------------------------------------------------------------
+
+def quantize_coords(coords: jnp.ndarray, stride: int) -> jnp.ndarray:
+    """q = floor(p / ts) * ts for ts a power of two, batch col untouched.
+
+    Arithmetic shift right then left implements floor-division semantics for
+    negative coordinates too (two's complement), exactly the paper's
+    "clearing the lowest log2(ts) bits" hardware trick.
+    """
+    if stride == 1:
+        return coords
+    k = int(np.log2(stride))
+    if 2 ** k != stride:
+        raise ValueError(f"stride must be a power of two, got {stride}")
+    spatial = (coords[:, 1:] >> k) << k
+    return jnp.concatenate([coords[:, :1], spatial], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Lexicographic sort helpers (the MergeSort stage of the Mapping Unit)
+# ---------------------------------------------------------------------------
+
+def _lex_sort(columns: Sequence[jnp.ndarray], num_keys: int):
+    """Stable lexicographic sort of parallel 1-D arrays on the first
+    `num_keys` columns.  This is the software analogue of the paper's
+    merge-sorting network (stage MS)."""
+    return lax.sort(tuple(columns), dimension=0, num_keys=num_keys,
+                    is_stable=True)
+
+
+def unique_coords(coords: jnp.ndarray, mask: jnp.ndarray):
+    """Deduplicate a masked coordinate set without dynamic shapes.
+
+    Ranking-based: sort lexicographically, mark first occurrences (adjacent
+    inequality), overwrite duplicates with SENTINEL, re-sort to compact valid
+    entries to the front.  Two passes through the sorting network — the same
+    dataflow PointAcc uses for output-cloud construction during
+    downsampling.
+    """
+    n, d = coords.shape
+    coords = jnp.where(mask[:, None], coords, SENTINEL)
+    cols = tuple(coords[:, i] for i in range(d))
+    sorted_cols = _lex_sort(cols, num_keys=d)
+    sorted_coords = jnp.stack(sorted_cols, axis=1)
+    prev = jnp.roll(sorted_coords, 1, axis=0)
+    is_first = jnp.any(sorted_coords != prev, axis=1)
+    is_first = is_first.at[0].set(True)
+    new_mask = is_first & jnp.all(sorted_coords != SENTINEL, axis=1)
+    deduped = jnp.where(new_mask[:, None], sorted_coords, SENTINEL)
+    # compaction pass: invalids (SENTINEL) sort to the end
+    cols2 = tuple(deduped[:, i] for i in range(d))
+    compact_cols = _lex_sort(cols2, num_keys=d)
+    compact = jnp.stack(compact_cols, axis=1)
+    out_mask = jnp.all(compact != SENTINEL, axis=1)
+    return compact, out_mask
+
+
+def downsample(pc: PointCloud, factor: int = 2) -> PointCloud:
+    """Output point cloud construction for a strided sparse conv.
+
+    Quantize to the coarser stride then deduplicate (both ranking-based).
+    """
+    new_stride = pc.stride * factor
+    q = quantize_coords(pc.coords, new_stride)
+    q = jnp.where(pc.mask[:, None], q, SENTINEL)
+    coords, mask = unique_coords(q, pc.mask)
+    return PointCloud(coords, mask, new_stride)
+
+
+# ---------------------------------------------------------------------------
+# Kernel mapping (paper §4.1.1 + Fig. 9): sort-merge intersection
+# ---------------------------------------------------------------------------
+
+def kernel_offsets(kernel_size: int, ndim: int,
+                   stride: int) -> np.ndarray:
+    """All kernel offsets delta in {-(k//2)..k//2}^D, scaled by the input
+    tensor stride.  Static (numpy) — offsets index the weight tensor."""
+    half = kernel_size // 2
+    rng = np.arange(-half, half + 1) if kernel_size % 2 == 1 else \
+        np.arange(0, kernel_size)
+    grids = np.meshgrid(*([rng] * ndim), indexing="ij")
+    offs = np.stack([g.reshape(-1) for g in grids], axis=1)
+    return (offs * stride).astype(np.int32)
+
+
+def _intersect_one_offset(shifted: jnp.ndarray, in_mask: jnp.ndarray,
+                          out_coords: jnp.ndarray, out_mask: jnp.ndarray,
+                          cap: int):
+    """Find coordinate-equal pairs between one shifted input cloud and the
+    output cloud.  Paper Fig. 9: merge-sort both clouds into one array and
+    detect adjacent duplicates (DetectIntersection stage).
+
+    Both clouds are coordinate-*sets* (no internal duplicates), so each match
+    is 1:1 and adjacency detection is exact.  The tag column (input=0,
+    output=1) is the last sort key, guaranteeing the input element of a
+    matching pair immediately precedes the output element.
+    """
+    n, d = shifted.shape
+    m = out_coords.shape[0]
+    shifted = jnp.where(in_mask[:, None], shifted, SENTINEL)
+    out_c = jnp.where(out_mask[:, None], out_coords, SENTINEL)
+
+    merged = jnp.concatenate([shifted, out_c], axis=0)          # (n+m, d)
+    tag = jnp.concatenate([jnp.zeros(n, jnp.int32),
+                           jnp.ones(m, jnp.int32)])
+    payload = jnp.concatenate([jnp.arange(n, dtype=jnp.int32),
+                               jnp.arange(m, dtype=jnp.int32)])
+    valid = jnp.concatenate([in_mask, out_mask])
+
+    cols = tuple(merged[:, i] for i in range(d)) + (tag, payload, valid)
+    sorted_cols = _lex_sort(cols, num_keys=d + 1)
+    s_coords = jnp.stack(sorted_cols[:d], axis=1)
+    s_tag, s_payload, s_valid = sorted_cols[d], sorted_cols[d + 1], \
+        sorted_cols[d + 2]
+
+    nxt_coords = jnp.roll(s_coords, -1, axis=0)
+    nxt_tag = jnp.roll(s_tag, -1)
+    nxt_payload = jnp.roll(s_payload, -1)
+    nxt_valid = jnp.roll(s_valid, -1)
+
+    is_pair = (jnp.all(s_coords == nxt_coords, axis=1)
+               & (s_tag == 0) & (nxt_tag == 1)
+               & s_valid & nxt_valid)
+    is_pair = is_pair.at[-1].set(False)
+
+    in_i = jnp.where(is_pair, s_payload, jnp.int32(-1))
+    out_i = jnp.where(is_pair, nxt_payload, jnp.int32(-1))
+
+    # Compact matches to the front (one more ranking pass): sort by
+    # (!is_pair) keeps relative (coordinate) order of the matches.
+    order_key = (~is_pair).astype(jnp.int32)
+    _, in_i, out_i, pair_sorted = _lex_sort(
+        (order_key, in_i, out_i, is_pair), num_keys=1)
+    return in_i[:cap], out_i[:cap], pair_sorted[:cap]
+
+
+def kernel_map(in_pc: PointCloud, out_pc: PointCloud, kernel_size: int,
+               cap: int | None = None) -> KernelMaps:
+    """Build the full kernel maps {(p_i, q_k, w_n)} for a sparse convolution.
+
+    For each weight offset delta, intersects the (-delta)-shifted input cloud
+    with the output cloud (paper §4.1.1).  vmapped over offsets — the
+    point-level parallelism the paper exploits, with offset-level parallelism
+    on top.
+    """
+    offs = kernel_offsets(kernel_size, in_pc.ndim_spatial, in_pc.stride)
+    cap = cap if cap is not None else min(in_pc.capacity, out_pc.capacity)
+    # shift only spatial dims; batch column gets zero offset
+    offs_full = np.concatenate(
+        [np.zeros((offs.shape[0], 1), np.int32), offs], axis=1)
+
+    def one(off):
+        shifted = in_pc.coords - off[None, :]   # I' = {p - delta}
+        return _intersect_one_offset(shifted, in_pc.mask, out_pc.coords,
+                                     out_pc.mask, cap)
+
+    in_idx, out_idx, valid = jax.vmap(one)(jnp.asarray(offs_full))
+    return KernelMaps(in_idx, out_idx, valid, offs)
+
+
+# ---------------------------------------------------------------------------
+# Stride-aware convenience wrappers used by the SparseConv layer
+# ---------------------------------------------------------------------------
+
+def build_conv_maps(in_pc: PointCloud, kernel_size: int, stride: int,
+                    cap: int | None = None):
+    """Maps + output cloud for a (possibly strided) sparse convolution.
+
+    stride == 1  -> submanifold conv: output sites == input sites (the
+                    paper's no-dilation invariant: nonzeros never dilate).
+    stride == 2  -> output cloud from quantization + unique, offsets in units
+                    of the *input* stride.
+    """
+    if stride == 1:
+        out_pc = in_pc
+    else:
+        out_pc = downsample(in_pc, stride)
+    maps = kernel_map(in_pc, out_pc, kernel_size, cap=cap)
+    return maps, out_pc

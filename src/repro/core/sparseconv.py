@@ -1,0 +1,120 @@
+"""Sparse convolution on point clouds: the two computation flows.
+
+Paper §4.2.3 / Fig. 17-right contrasts:
+
+  * Gather-MatMul-Scatter (G-M-S): the GPU flow.  Gather all input rows for
+    every weight offset into one contiguous (K, cap, Cin) tensor, one big
+    GEMM, then scatter-add partial sums.  Maximum GEMM efficiency, maximum
+    memory traffic (features read up to 27x, psums written to DRAM).
+
+  * Fetch-on-Demand (FoD): the PointAcc flow.  Stream over weight offsets
+    (weight-stationary), fetch only the rows needed for the current tile,
+    multiply immediately, accumulate output-stationary partial sums that
+    never leave on-chip memory.
+
+Here the FoD flow has two realisations:
+  - an XLA realisation (`flow="fod"`): `lax.scan` over offsets with a carried
+    output accumulator — peak memory is K-times smaller than G-M-S because
+    the gathered tensor is never materialised across offsets;
+  - a Pallas TPU kernel (`repro.kernels.spconv`) where scalar-prefetched map
+    indices drive the BlockSpec index_map, so rows move HBM->VMEM exactly
+    once per compute tile (the paper's configurable cache block) — see
+    kernels/spconv/spconv.py.
+
+Both flows are numerically identical; tests cross-check them against a dense
+`lax.conv_general_dilated` oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.mapping import KernelMaps, PointCloud, build_conv_maps
+
+
+def gather_matmul_scatter(features: jnp.ndarray, maps: KernelMaps,
+                          weights: jnp.ndarray, out_cap: int) -> jnp.ndarray:
+    """Baseline GPU flow (paper Fig. 4).
+
+    features: (N, Cin); weights: (K, Cin, Cout) -> (out_cap, Cout).
+    """
+    k, cap = maps.in_idx.shape
+    cout = weights.shape[-1]
+    gathered = features[jnp.clip(maps.in_idx, 0), :]          # (K, cap, Cin)
+    gathered = gathered * maps.valid[..., None]
+    psums = jnp.einsum("kmc,kcd->kmd", gathered, weights,
+                       preferred_element_type=jnp.float32)
+    out = jnp.zeros((out_cap, cout), psums.dtype)
+    scatter_idx = jnp.where(maps.valid, maps.out_idx, out_cap)  # OOB -> drop
+    out = out.at[scatter_idx.reshape(-1)].add(
+        psums.reshape(-1, cout), mode="drop")
+    return out.astype(features.dtype)
+
+
+def fetch_on_demand(features: jnp.ndarray, maps: KernelMaps,
+                    weights: jnp.ndarray, out_cap: int) -> jnp.ndarray:
+    """PointAcc flow, XLA realisation.
+
+    Weight-stationary scan over kernel offsets; the output accumulator is the
+    scan carry (output-stationary — partial sums never spill).  Peak live
+    gathered tensor is (cap, Cin) instead of (K, cap, Cin).
+    """
+    cout = weights.shape[-1]
+
+    def step(out, inputs):
+        in_idx, out_idx, valid, w = inputs
+        rows = features[jnp.clip(in_idx, 0), :] * valid[:, None]
+        psum = jnp.dot(rows, w, preferred_element_type=jnp.float32)
+        idx = jnp.where(valid, out_idx, out_cap)
+        out = out.at[idx].add(psum, mode="drop")
+        return out, None
+
+    out0 = jnp.zeros((out_cap, cout), jnp.float32)
+    out, _ = lax.scan(step, out0,
+                      (maps.in_idx, maps.out_idx, maps.valid, weights))
+    return out.astype(features.dtype)
+
+
+def sparse_conv_apply(features: jnp.ndarray, maps: KernelMaps,
+                      weights: jnp.ndarray, out_cap: int,
+                      flow: str = "fod") -> jnp.ndarray:
+    if flow == "gms":
+        return gather_matmul_scatter(features, maps, weights, out_cap)
+    if flow == "fod":
+        return fetch_on_demand(features, maps, weights, out_cap)
+    if flow == "pallas":
+        from repro.kernels.spconv import ops as spconv_ops
+        return spconv_ops.sparse_conv_fod(features, maps, weights, out_cap)
+    raise ValueError(f"unknown flow {flow!r}")
+
+
+class SparseConvResult(NamedTuple):
+    features: jnp.ndarray
+    pc: PointCloud
+    maps: KernelMaps
+
+
+def sparse_conv(pc: PointCloud, features: jnp.ndarray, weights: jnp.ndarray,
+                kernel_size: int, stride: int = 1, flow: str = "fod",
+                cap: int | None = None) -> SparseConvResult:
+    """Full sparse conv layer: mapping (MPU) + streaming GEMM (MMU+MXU)."""
+    maps, out_pc = build_conv_maps(pc, kernel_size, stride, cap=cap)
+    out = sparse_conv_apply(features, maps, weights, out_pc.capacity, flow)
+    out = out * out_pc.mask[:, None]
+    return SparseConvResult(out, out_pc, maps)
+
+
+def sparse_conv_transposed(features: jnp.ndarray, maps: KernelMaps,
+                           out_pc: PointCloud, weights: jnp.ndarray,
+                           flow: str = "fod") -> jnp.ndarray:
+    """Transposed (up-sampling) conv: reuse the encoder's maps with in/out
+    roles swapped (MinkowskiEngine semantics; paper §2.1.1 'upsampling is the
+    inverse of the corresponding downsampling')."""
+    out = sparse_conv_apply(features, maps.swap(), weights, out_pc.capacity,
+                            flow)
+    return out * out_pc.mask[:, None]

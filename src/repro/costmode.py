@@ -1,0 +1,34 @@
+"""Cost-accounting mode for the dry-run's depth-extrapolation compiles.
+
+XLA's `cost_analysis()` visits a `while` body once, independent of trip
+count.  The dry-run's depth-1/2 extrapolation therefore cancels any cost
+that lives INSIDE the layer scan (both compiles contain one identical
+body): per-layer flops/bytes/collectives would be undercounted by
+n_bodies.  Under cost mode the layer scan and the chunked-CE scan unroll
+into straight-line code, so the depth-2 minus depth-1 delta is exactly one
+body's true cost.  The full-depth compile (memory/compile proof) stays
+scanned.
+
+Inner SSM chunk scans (mamba/mLSTM) remain scanned even in cost mode (their
+trip counts are seq/chunk ~ 32-256; unrolling would explode the HLO); their
+FLOPs are covered by the analytic model and their bytes/collective
+contributions are documented as lower-bounded.
+"""
+
+import contextlib
+import contextvars
+
+_COST_MODE = contextvars.ContextVar("repro_cost_mode", default=False)
+
+
+def enabled() -> bool:
+    return _COST_MODE.get()
+
+
+@contextlib.contextmanager
+def enable():
+    tok = _COST_MODE.set(True)
+    try:
+        yield
+    finally:
+        _COST_MODE.reset(tok)

@@ -1,0 +1,64 @@
+"""Host-side data pipeline: deterministic skip-ahead + double-buffered
+prefetch.
+
+The iterator is a pure function of step number (data/synthetic.py), so
+`start_step` restores any position instantly — no epoch bookkeeping to
+checkpoint, and a replacement host after a failure regenerates exactly the
+batches it owes (the straggler/elastic story in DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class PrefetchIterator:
+    """Wraps batch_fn(step) -> pytree with a background producer thread and
+    a bounded queue (double buffering: host builds batch t+1 while device
+    runs step t)."""
+
+    def __init__(self, batch_fn: Callable[[int], dict], start_step: int = 0,
+                 buffer: int = 2, device_put: bool = False, shardings=None):
+        self.batch_fn = batch_fn
+        self.step = start_step
+        self.buffer = buffer
+        self.device_put = device_put
+        self.shardings = shardings
+        self._q: queue.Queue = queue.Queue(maxsize=buffer)
+        self._stop = threading.Event()
+        self._t = threading.Thread(target=self._produce, daemon=True)
+        self._t.start()
+
+    def _produce(self):
+        step = self.step
+        while not self._stop.is_set():
+            batch = self.batch_fn(step)
+            if self.device_put:
+                batch = jax.device_put(batch, self.shardings)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.5)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        step, batch = self._q.get()
+        return step, batch
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,39 @@
+"""jit'd wrapper with custom_vjp: Pallas forward, reference-recompute
+backward (training defaults to the XLA path + remat; the kernel targets
+prefill/serving where no backward exists)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import \
+    flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, causal=True, window=None, softcap=None,
+                    block=128, interpret=True):
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  softcap=softcap, block_q=block,
+                                  block_k=block, interpret=interpret)
+
+
+def _fwd(q, k, v, causal, window, softcap, block, interpret):
+    out = flash_attention(q, k, v, causal, window, softcap, block, interpret)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, softcap, block, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: attention_ref(q, k, v, causal=causal, window=window,
+                                      softcap=softcap), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,32 @@
+"""jit'd wrapper: pads the cache to the block multiple, handles layouts."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.flash_decode import flash_decode_pallas
+from repro.kernels.flash_decode.ref import flash_decode_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("softcap", "block_s", "interpret"))
+def flash_decode(q, k, v, lengths, *, softcap=None, block_s: int = 256,
+                 interpret: bool = True):
+    """Decode attention: q (B, Hq, hd) vs cache k/v (B, S, Hkv, hd) with
+    per-sequence valid lengths (B,)."""
+    s = k.shape[1]
+    block_s = min(block_s, _round_up(s, 128))
+    pad = _round_up(s, block_s) - s
+    if pad:
+        cfg = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        k = jnp.pad(k, cfg)
+        v = jnp.pad(v, cfg)
+    return flash_decode_pallas(q, k, v, lengths, softcap=softcap,
+                               block_s=block_s, interpret=interpret)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash-decode kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_decode_ref(q, k, v, lengths, *, softcap=None, scale=None):
+    """q (B, Hq, hd); k/v (B, S, Hkv, hd); lengths (B,) -> (B, Hq, hd)."""
+    b, hq, hd = q.shape
+    _, s, hkv, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, hkv, g, hd).astype(jnp.float32) * scale
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg, k.astype(jnp.float32))
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    valid = jnp.arange(s)[None, :] < lengths[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, hd).astype(q.dtype)

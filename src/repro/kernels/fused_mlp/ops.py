@@ -1,0 +1,55 @@
+"""jit'd wrapper: pads the point dim, applies the fusion plan."""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fusion import plan_fusion
+from repro.kernels.fused_mlp.fused_mlp import fused_mlp_pallas
+from repro.kernels.fused_mlp.ref import fused_mlp_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("final_act", "tile_points",
+                                             "interpret"))
+def fused_mlp(x: jnp.ndarray, weights: Sequence[jnp.ndarray],
+              biases: Sequence[jnp.ndarray], *, tile_points: int = 512,
+              final_act: bool = True, interpret: bool = True) -> jnp.ndarray:
+    n = x.shape[0]
+    n_pad = _round_up(n, tile_points)
+    xp = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+    out = fused_mlp_pallas(xp, tuple(weights), tuple(biases),
+                           tile_points=tile_points, final_act=final_act,
+                           interpret=interpret)
+    return out[:n]
+
+
+def fused_mlp_chain(x: jnp.ndarray, params: dict, *, final_act: bool = True,
+                    budget_bytes: int | None = None,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Apply an nn.mlp_chain parameter dict through fusion groups chosen by
+    the paper's compile-time planner (core.fusion.plan_fusion)."""
+    n_fcs = len(params)
+    ws = [params[f"fc{i}"]["w"] for i in range(n_fcs)]
+    bs = [params[f"fc{i}"].get("b", jnp.zeros(ws[i].shape[1], ws[i].dtype))
+          for i in range(n_fcs)]
+    widths = [ws[0].shape[0]] + [w.shape[1] for w in ws]
+    kwargs = {} if budget_bytes is None else {"budget_bytes": budget_bytes}
+    groups = plan_fusion(widths, **kwargs)
+    h = x
+    for gi, g in enumerate(groups):
+        last_group = gi == len(groups) - 1
+        h = fused_mlp(
+            h, ws[g.start:g.start + g.n_layers],
+            bs[g.start:g.start + g.n_layers],
+            tile_points=g.tile_points,
+            final_act=final_act or not last_group,
+            interpret=interpret)
+    return h

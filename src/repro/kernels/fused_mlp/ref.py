@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused MLP kernel."""
+
+import jax.numpy as jnp
+
+
+def fused_mlp_ref(x, weights, biases, final_act: bool = True):
+    h = x
+    n = len(weights)
+    for i, (w, b) in enumerate(zip(weights, biases)):
+        h = jnp.dot(h, w, preferred_element_type=jnp.float32) + b
+        if i < n - 1 or final_act:
+            h = jnp.maximum(h, 0.0)
+    return h.astype(x.dtype)

@@ -1,0 +1,110 @@
+"""Sorted MoE dispatch + grouped-matmul FFN (ranking-based, PointAcc-style).
+
+The dispatch is the Mapping-Unit step: a stable `lax.sort` of assignment
+expert-ids produces contiguous per-expert segments (maps), capacity-clipped
+and padded to the row tile; the grouped matmul kernel consumes them
+Fetch-on-Demand.  The dense one-hot dispatch (`repro.models.moe.dense`) is
+the Gather-MatMul-Scatter baseline for the Fig.17-style comparison.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.grouped_matmul.grouped_matmul import grouped_matmul_pallas
+from repro.kernels.grouped_matmul.ref import grouped_matmul_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+class Dispatch(NamedTuple):
+    """Maps from (token, choice) assignments to sorted padded rows."""
+    dest_row: jnp.ndarray     # (T, topk) int32 row in sorted buffer, -1 drop
+    tile_eid: jnp.ndarray     # (rows // row_tile,) int32 expert per row tile
+    src_token: jnp.ndarray    # (rows,) int32 source token per row, -1 pad
+    n_rows: int
+
+
+def make_dispatch(expert_idx: jnp.ndarray, n_experts: int,
+                  capacity: int, row_tile: int = 128) -> Dispatch:
+    """expert_idx (T, topk) -> sorted segment layout.
+
+    capacity = max tokens kept per expert (already row_tile aligned by the
+    caller).  Ranking-based: one stable sort over assignments.
+    """
+    t, topk = expert_idx.shape
+    a = t * topk
+    flat_e = expert_idx.reshape(-1).astype(jnp.int32)
+    flat_tok = jnp.arange(a, dtype=jnp.int32) // topk
+
+    # Mapping Unit: sort assignments by expert id (stable keeps token order)
+    s_e, s_tok, s_a = lax.sort((flat_e, flat_tok,
+                                jnp.arange(a, dtype=jnp.int32)),
+                               dimension=0, num_keys=1, is_stable=True)
+    # position within the expert segment
+    seg_start = jnp.searchsorted(s_e, jnp.arange(n_experts), side="left")
+    pos = jnp.arange(a, dtype=jnp.int32) - seg_start[s_e]
+    keep = pos < capacity
+    dest = jnp.where(keep, s_e * capacity + pos, -1)
+
+    # scatter dest back to (token, choice) order
+    dest_row = jnp.full((a,), -1, jnp.int32).at[s_a].set(dest)
+    n_rows = n_experts * capacity
+    src_token = jnp.full((n_rows,), -1, jnp.int32).at[
+        jnp.where(keep, dest, n_rows)].set(s_tok, mode="drop")
+    tile_eid = jnp.repeat(jnp.arange(n_experts, dtype=jnp.int32),
+                          capacity // row_tile)
+    return Dispatch(dest_row.reshape(t, topk), tile_eid, src_token, n_rows)
+
+
+def grouped_matmul(x: jnp.ndarray, tile_eid: jnp.ndarray,
+                   weights: jnp.ndarray, row_tile: int = 128,
+                   interpret: bool = True, use_kernel: bool = True):
+    if use_kernel:
+        return grouped_matmul_pallas(x, tile_eid, weights,
+                                     row_tile=row_tile, interpret=interpret)
+    return grouped_matmul_ref(x, tile_eid, weights, row_tile=row_tile)
+
+
+def sorted_moe_ffn(x: jnp.ndarray, expert_idx: jnp.ndarray,
+                   gates: jnp.ndarray, w_in: jnp.ndarray,
+                   w_out: jnp.ndarray, *, capacity_factor: float = 1.25,
+                   row_tile: int = 128, act=jax.nn.silu,
+                   w_gate: jnp.ndarray | None = None,
+                   interpret: bool = True,
+                   use_kernel: bool = True) -> jnp.ndarray:
+    """Full sorted-dispatch MoE FFN.
+
+    x (T, D); expert_idx/gates (T, topk); w_in (E, D, F); w_out (E, F, D);
+    optional w_gate (E, D, F) for gated (SwiGLU-style) experts.
+    """
+    t, d = x.shape
+    e = w_in.shape[0]
+    topk = expert_idx.shape[1]
+    capacity = _round_up(int(t * topk * capacity_factor / e) + 1, row_tile)
+    disp = make_dispatch(expert_idx, e, capacity, row_tile)
+
+    xs = jnp.where(disp.src_token[:, None] >= 0,
+                   x[jnp.maximum(disp.src_token, 0)], 0.0)    # (rows, D)
+    h = grouped_matmul(xs, disp.tile_eid, w_in, row_tile, interpret,
+                       use_kernel)
+    if w_gate is not None:
+        g = grouped_matmul(xs, disp.tile_eid, w_gate, row_tile, interpret,
+                           use_kernel)
+        h = act(g) * h
+    else:
+        h = act(h)
+    y = grouped_matmul(h, disp.tile_eid, w_out, row_tile, interpret,
+                       use_kernel)                            # (rows, D)
+
+    # combine: gather each assignment's row, weight by gate, sum over topk
+    picked = jnp.where(disp.dest_row[..., None] >= 0,
+                       y[jnp.maximum(disp.dest_row, 0)], 0.0)  # (T,topk,D)
+    return jnp.sum(picked * gates[..., None], axis=1).astype(x.dtype)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the grouped matmul kernel."""
+
+import jax.numpy as jnp
+
+
+def grouped_matmul_ref(x, tile_eid, weights, row_tile: int = 128):
+    r, cin = x.shape
+    n_tiles = r // row_tile
+    xt = x.reshape(n_tiles, row_tile, cin)
+    wt = weights[tile_eid]                              # (n_tiles, Cin, Cout)
+    out = jnp.einsum("tik,tkj->tij", xt, wt,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(r, weights.shape[-1]).astype(x.dtype)

@@ -1,0 +1,53 @@
+"""jit'd public wrapper: KernelMaps -> inverted index table -> Pallas call."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mapping import KernelMaps
+from repro.kernels.spconv.spconv import spconv_fod_pallas
+from repro.kernels.spconv.ref import spconv_fod_ref
+
+
+def invert_maps(maps: KernelMaps, out_cap: int) -> jnp.ndarray:
+    """(K, cap) map lists -> (K, out_cap) inverse table inv[k, j] = i.
+
+    Kernel mapping is 1:1 per offset (both clouds are coordinate sets), so
+    the scatter is collision-free.
+    """
+    k, cap = maps.in_idx.shape
+    inv = jnp.full((k, out_cap), -1, jnp.int32)
+    oidx = jnp.where(maps.valid, maps.out_idx, out_cap)      # OOB -> dropped
+    rows = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32)[:, None],
+                            (k, cap))
+    return inv.at[rows.reshape(-1), oidx.reshape(-1)].set(
+        maps.in_idx.reshape(-1), mode="drop")
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("out_cap", "out_tile", "interpret"))
+def sparse_conv_fod(features: jnp.ndarray, maps: KernelMaps,
+                    weights: jnp.ndarray, out_cap: int,
+                    out_tile: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Drop-in replacement for core.sparseconv flows (flow='pallas').
+
+    interpret=True is the CPU-validation default; on real TPU pass False.
+    """
+    inv = invert_maps(maps, out_cap)
+    m_pad = _round_up(out_cap, out_tile)
+    inv = jnp.pad(inv, ((0, 0), (0, m_pad - out_cap)), constant_values=-1)
+    out = spconv_fod_pallas(features, inv, weights, out_tile=out_tile,
+                            interpret=interpret)
+    return out[:out_cap]
+
+
+def sparse_conv_fod_ref(features, maps, weights, out_cap):
+    return spconv_fod_ref(features, invert_maps(maps, out_cap), weights)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the Fetch-on-Demand sparse conv kernel."""
+
+import jax.numpy as jnp
+
+
+def spconv_fod_ref(features: jnp.ndarray, inv_idx: jnp.ndarray,
+                   weights: jnp.ndarray) -> jnp.ndarray:
+    """out[j] = sum_k valid[k,j] * features[inv_idx[k,j]] @ W[k]."""
+    valid = inv_idx >= 0                                     # (K, M)
+    rows = features[jnp.maximum(inv_idx, 0)]                 # (K, M, Cin)
+    rows = rows * valid[..., None]
+    out = jnp.einsum("kmc,kcd->md", rows, weights,
+                     preferred_element_type=jnp.float32)
+    return out.astype(features.dtype)

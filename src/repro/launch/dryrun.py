@@ -1,0 +1,338 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input shape x mesh) cell on the production mesh, print
+memory/cost analysis, and extract the roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b \
+      --shape train_4k [--multi-pod] [--out results.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+The XLA_FLAGS line above MUST stay the first statement: jax locks the
+device count on first initialisation.  (Tests may pre-set DRYRUN_DEVICES to
+shrink the placeholder device pool before importing this module.)
+"""
+
+import sys
+
+if os.environ.get("DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["DRYRUN_DEVICES"])
+
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import numpy as np
+
+
+def _build_argparser():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None,
+                   choices=[None, "train_4k", "prefill_32k", "decode_32k",
+                            "long_500k"])
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--out", default="benchmarks/results/dryrun.json")
+    p.add_argument("--debug-mesh", action="store_true",
+                   help="tiny 8-device mesh (needs DRYRUN_DEVICES=8)")
+    p.add_argument("--skip-full", action="store_true",
+                   help="skip the full-depth compile (cost terms only)")
+    p.add_argument("--no-cost", action="store_true",
+                   help="full compile only (no depth-1/2 roofline "
+                        "compiles) — used for the multi-pod pass")
+    p.add_argument("--fsdp-min-params", type=float, default=3e9,
+                   help="enable FSDP above this param count (H2: lower it "
+                        "to turn grad all-reduce into reduce-scatter)")
+    p.add_argument("--grad-bf16", action="store_true",
+                   help="H2: cast grads to bf16 before the DP reduction")
+    p.add_argument("--no-sp", action="store_true",
+                   help="H2: disable Megatron-SP boundary sharding")
+    p.add_argument("--baseline", action="store_true",
+                   help="paper-faithful baseline: disable the §Perf "
+                        "optimizations (flash-decode cache sharding, "
+                        "token-sharded EP, pinned embed lookup)")
+    return p
+
+
+LM_ARCHS = [
+    "gemma2-2b", "granite-34b", "qwen1.5-4b", "qwen1.5-32b",
+    "jamba-v0.1-52b", "xlstm-125m", "seamless-m4t-medium",
+    "granite-moe-1b-a400m", "mixtral-8x7b", "qwen2-vl-72b",
+]
+ALL_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main(argv=None):
+    args = _build_argparser().parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+    from repro import configs
+    from repro.distributed import sharding as SH
+
+    if args.baseline:
+        from repro.models import lm as _lm
+        from repro.models import moe as _moe
+        _lm.PINNED_EMBED_DEFAULT = False
+        _moe.TOKEN_SHARDED_DEFAULT = False
+    from repro.launch import roofline as RL
+    from repro.launch.mesh import make_debug_mesh, make_production_mesh
+    from repro.launch.shapes import (SHAPES, cell_supported,
+                                     decode_state_specs, input_specs)
+    from repro.models import registry
+    from repro.serve.engine import (ServeConfig, make_decode_step,
+                                    make_prefill_step)
+    from repro.train import optim as OPT
+    from repro.train.step import TrainConfig, make_train_step
+
+    REP = None  # placeholder; set per-mesh below
+
+    def n_params(shapes_tree) -> int:
+        return sum(int(np.prod(l.shape)) for l in
+                   jax.tree_util.tree_leaves(shapes_tree))
+
+    def n_active_params(cfg, shapes_tree) -> int:
+        """6*N_active*D accounting: MoE experts scaled by topk/E."""
+        total, expert = 0, 0
+        def walk(path, leaf):
+            nonlocal total, expert
+            n = int(np.prod(leaf.shape))
+            total += n
+            names = SH._path_names(path)
+            if names and names[-1] in ("w_in", "w_gate", "w_out"):
+                expert += n
+            return leaf
+        jax.tree_util.tree_map_with_path(walk, shapes_tree)
+        if cfg.n_experts:
+            return total - expert + expert * cfg.topk / cfg.n_experts
+        return total
+
+    def device_bytes(shapes_tree, shardings_tree, mesh) -> float:
+        """Analytic per-device bytes of a sharded tree."""
+        leaves = jax.tree_util.tree_leaves(shapes_tree)
+        shards = jax.tree_util.tree_leaves(
+            shardings_tree, is_leaf=lambda x: hasattr(x, "spec"))
+        total = 0.0
+        for l, s in zip(leaves, shards):
+            n = int(np.prod(l.shape)) * l.dtype.itemsize
+            div = 1
+            for ax in s.spec:
+                if ax is None:
+                    continue
+                for a in (ax if isinstance(ax, tuple) else (ax,)):
+                    div *= mesh.shape[a]
+            total += n / div
+        return total
+
+    def make_cell_fns(cfg, shape, mesh, sc):
+        """Returns (lower_fn, aux_info).  lower_fn() -> jax.stages.Lowered"""
+        model = registry.build(cfg)
+        param_shapes = jax.eval_shape(model.init, jax.random.key(0))
+        p_sh = SH.params_shardings(param_shapes, sc)
+        batch = input_specs(cfg, shape)
+        b_sh = SH.batch_specs(batch, sc)
+        rep = SH.replicated(sc)
+
+        if shape.kind == "train":
+            opt_shapes = jax.eval_shape(OPT.init, param_shapes)
+            opt_sh = OPT.OptState(step=rep, m=p_sh, v=p_sh)
+            tc = TrainConfig(
+                grad_reduce_dtype=jnp.bfloat16 if args.grad_bf16 else None)
+            step = make_train_step(model, tc, OPT.AdamWConfig(), sc)
+            metrics_sh = {k: rep for k in
+                          ("loss", "aux", "n_tokens", "grad_norm", "lr")}
+            jitted = jax.jit(step, in_shardings=(p_sh, opt_sh, b_sh),
+                             out_shardings=(p_sh, opt_sh, metrics_sh),
+                             donate_argnums=(0, 1))
+            def lower():
+                return jitted.lower(param_shapes, opt_shapes, batch)
+        elif shape.kind == "prefill":
+            svc = ServeConfig(max_len=shape.seq)
+            step = make_prefill_step(model, svc, sc)
+            out_states = jax.eval_shape(
+                lambda p, b: step(p, b)[1], param_shapes, batch)
+            st_sh = SH.state_specs(out_states, sc)
+            tok_sh = SH.batch_specs(
+                {"t": jax.ShapeDtypeStruct((shape.batch,), jnp.int32)},
+                sc)["t"]
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh),
+                             out_shardings=(tok_sh, st_sh))
+            def lower():
+                return jitted.lower(param_shapes, batch)
+        else:  # decode
+            svc = ServeConfig(max_len=shape.seq)
+            step = make_decode_step(model, svc, sc)
+            states = decode_state_specs(model, cfg, shape)
+            st_sh = SH.state_specs(states, sc)
+            tok_sh = SH.batch_specs(
+                {"t": jax.ShapeDtypeStruct((shape.batch,), jnp.int32)},
+                sc)["t"]
+            jitted = jax.jit(step, in_shardings=(p_sh, st_sh, b_sh),
+                             out_shardings=(tok_sh, st_sh),
+                             donate_argnums=(1,))
+            def lower():
+                return jitted.lower(param_shapes, states, batch)
+
+        info = {
+            "n_params": n_params(param_shapes),
+            "n_active_params": n_active_params(cfg, param_shapes),
+            "param_bytes_per_device": device_bytes(param_shapes, p_sh,
+                                                   mesh),
+        }
+        return lower, info
+
+    def run_cell(arch: str, shape_name: str, multi_pod: bool,
+                 skip_full: bool = False) -> dict:
+        cfg = configs.get(arch)
+        shape = SHAPES[shape_name]
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+
+        reason = cell_supported(cfg, shape)
+        if reason:
+            rec.update(status="skipped", reason=reason)
+            return rec
+
+        if args.debug_mesh:
+            mesh = make_debug_mesh(multi_pod=multi_pod)
+        else:
+            mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = int(np.prod(list(mesh.shape.values())))
+        model0 = registry.build(cfg)
+        n_p = n_params(jax.eval_shape(model0.init, jax.random.key(0)))
+        sc = SH.ShardingConfig(
+            mesh,
+            fsdp=(n_p > args.fsdp_min_params and shape.kind == "train"),
+            seq_parallel=(shape.kind != "decode" and not args.no_sp),
+            shard_seq_over_data=(shape.kind == "decode"),
+            kv_seq_over_model=not args.baseline)
+
+        t0 = time.time()
+        try:
+            # ---- full-depth compile: THE dry-run proof --------------------
+            if not skip_full:
+                lower_full, info = make_cell_fns(cfg, shape, mesh, sc)
+                lowered = lower_full()
+                compiled = lowered.compile()
+                try:
+                    ma = compiled.memory_analysis()
+                    rec["memory_analysis"] = {
+                        k: int(getattr(ma, k))
+                        for k in ("argument_size_in_bytes",
+                                  "output_size_in_bytes",
+                                  "temp_size_in_bytes",
+                                  "generated_code_size_in_bytes")
+                        if hasattr(ma, k)} if ma is not None else None
+                except Exception as e:  # CPU backend may not support it
+                    rec["memory_analysis"] = f"unavailable: {e}"
+                rec["compile_s_full"] = round(time.time() - t0, 1)
+            else:
+                _, info = make_cell_fns(cfg, shape, mesh, sc)
+
+            if args.no_cost:
+                rec.update(status="ok", chips=chips,
+                           n_params=info["n_params"],
+                           total_s=round(time.time() - t0, 1))
+                return rec
+
+            # ---- depth-1/2 compiles for scan-corrected cost terms ---------
+            # cost mode unrolls the layer/CE scans so per-layer costs are
+            # visible to cost_analysis (see repro.costmode)
+            from repro import costmode
+            n_bodies = max(1, cfg.n_layers // cfg.block_pattern)
+            costs, colls = [], []
+            for k in (1, 2):
+                ckw = {"n_layers": cfg.block_pattern * k}
+                if cfg.encoder_layers:
+                    ckw["encoder_layers"] = k
+                cfg_k = cfg.replace(**ckw)
+                lf, _ = make_cell_fns(cfg_k, shape, mesh, sc)
+                with costmode.enable():
+                    comp_k = lf().compile()
+                costs.append(RL.extract_cost(comp_k))
+                colls.append(RL.collective_bytes(comp_k.as_text()))
+            cell = RL.extrapolate(costs[0], costs[1], colls[0], colls[1],
+                                  n_bodies)
+            # analytic compute model (inner scans undercounted by HLO)
+            from repro.launch import flops as FL
+            af = FL.cell_flops(cfg, shape, remat=(shape.kind == "train"))
+            mf = RL.model_flops(cfg, shape, info["n_active_params"])
+            terms = cell.terms(af["total"] / chips)
+            dominant = max(terms, key=terms.get)
+            rec.update(
+                status="ok",
+                chips=chips,
+                n_params=info["n_params"],
+                n_active_params=info["n_active_params"],
+                param_bytes_per_device=round(
+                    info["param_bytes_per_device"]),
+                analytic_flops=af["total"],
+                hlo_flops_per_chip=cell.flops,
+                hlo_bytes_per_chip=cell.hbm_bytes,
+                coll_bytes_per_chip=cell.coll_bytes_per_chip,
+                coll_by_kind=cell.coll_by_kind,
+                **{k: float(f"{v:.6g}") for k, v in terms.items()},
+                dominant=dominant.replace("_s", ""),
+                model_flops=mf,
+                useful_flops_ratio=float(f"{mf / max(af['total'], 1):.4g}"),
+                hlo_vs_analytic=float(
+                    f"{cell.flops * chips / max(af['total'], 1):.4g}"),
+                total_s=round(time.time() - t0, 1),
+            )
+        except Exception as e:
+            rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                       traceback=traceback.format_exc()[-2000:],
+                       total_s=round(time.time() - t0, 1))
+        return rec
+
+    # ------------------------------------------------------------------
+    cells = []
+    archs = [args.arch] if args.arch else LM_ARCHS
+    shapes = [args.shape] if args.shape else ALL_SHAPES
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status") in ("ok", "skipped")}
+
+    for mp in meshes:
+        mesh_name = "2x16x16" if mp else "16x16"
+        for arch in archs:
+            for shape_name in shapes:
+                key = (arch, shape_name, mesh_name)
+                if key in done:
+                    print(f"[cached] {key}")
+                    continue
+                print(f"[run] {key}", flush=True)
+                rec = run_cell(arch, shape_name, mp,
+                               skip_full=args.skip_full)
+                print(json.dumps(
+                    {k: v for k, v in rec.items() if k != "traceback"},
+                    indent=None), flush=True)
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r["mesh"]) != key]
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+
+    n_ok = sum(1 for r in results if r.get("status") == "ok")
+    n_err = sum(1 for r in results if r.get("status") == "error")
+    n_skip = sum(1 for r in results if r.get("status") == "skipped")
+    print(f"\ndry-run summary: {n_ok} ok, {n_skip} skipped (noted), "
+          f"{n_err} errors -> {args.out}")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

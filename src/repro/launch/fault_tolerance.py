@@ -1,0 +1,99 @@
+"""Fault-tolerance runtime pieces for the training launcher.
+
+  * PreemptionHandler — SIGTERM/SIGINT -> finish the in-flight step, force a
+    checkpoint, exit cleanly (what a TPU maintenance event sends).
+  * Heartbeat — per-step wall-time log with a stall watchdog; at cluster
+    scale the same records feed the coordinator's straggler detection
+    (slowest-k host report).
+  * step_timer — rolling step-time stats; flags straggler steps
+    (> k x median), the single-process analogue of cross-host straggler
+    mitigation.
+
+Design notes for 1000+ nodes (documented, exercised here single-process):
+  * jax.distributed coordinator with
+    --coordinator_timeout / heartbeat flags handles hard node failures: the
+    job restarts from the last committed checkpoint (store.py atomicity).
+  * slice-swap / elastic downsize is resharding-on-restore (elastic.py).
+  * data skip-ahead is deterministic (data/synthetic.py is stateless in
+    (seed, step)), so any replacement host resumes mid-epoch exactly.
+"""
+
+from __future__ import annotations
+
+import collections
+import signal
+import statistics
+import threading
+import time
+from typing import Callable, Optional
+
+
+class PreemptionHandler:
+    """Install with `with PreemptionHandler() as p:` and poll
+    `p.should_stop` once per step."""
+
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self._signals = signals
+        self._orig = {}
+        self.should_stop = False
+
+    def _handle(self, signum, frame):
+        self.should_stop = True
+
+    def __enter__(self):
+        for s in self._signals:
+            self._orig[s] = signal.signal(s, self._handle)
+        return self
+
+    def __exit__(self, *exc):
+        for s, h in self._orig.items():
+            signal.signal(s, h)
+        return False
+
+
+class Heartbeat:
+    """Background watchdog: if no beat() within `stall_s`, invoke
+    on_stall (default: log loudly).  The cluster version reports to the
+    coordinator instead."""
+
+    def __init__(self, stall_s: float = 600.0,
+                 on_stall: Optional[Callable] = None):
+        self.stall_s = stall_s
+        self.on_stall = on_stall or (lambda dt: print(
+            f"[heartbeat] STALL: no step completed in {dt:.0f}s",
+            flush=True))
+        self._last = time.time()
+        self._stop = threading.Event()
+        self._t = threading.Thread(target=self._watch, daemon=True)
+        self._t.start()
+
+    def beat(self):
+        self._last = time.time()
+
+    def _watch(self):
+        while not self._stop.wait(self.stall_s / 4):
+            dt = time.time() - self._last
+            if dt > self.stall_s:
+                self.on_stall(dt)
+
+    def close(self):
+        self._stop.set()
+
+
+class StepTimer:
+    """Rolling step-time tracker with straggler flagging."""
+
+    def __init__(self, window: int = 50, straggler_factor: float = 2.0):
+        self.times = collections.deque(maxlen=window)
+        self.factor = straggler_factor
+        self._t0 = None
+
+    def start(self):
+        self._t0 = time.time()
+
+    def stop(self) -> dict:
+        dt = time.time() - self._t0
+        med = statistics.median(self.times) if self.times else dt
+        straggler = len(self.times) >= 5 and dt > self.factor * med
+        self.times.append(dt)
+        return {"step_s": dt, "median_s": med, "straggler": straggler}

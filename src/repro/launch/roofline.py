@@ -1,0 +1,139 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware model (TPU v5e):
+  peak bf16 compute   197 TFLOP/s per chip
+  HBM bandwidth       819 GB/s per chip
+  ICI link bandwidth  ~50 GB/s per link
+
+Terms per cell:
+  compute    = HLO_FLOPs   / (chips * peak)
+  memory     = HLO_bytes   / (chips * hbm_bw)
+  collective = coll_bytes  / (chips * link_bw)
+
+`cost_analysis()` counts a `lax.scan` body ONCE (verified experimentally),
+so whole-model costs are reconstructed by two-point extrapolation: lower the
+same step at depth = 1 body and 2 bodies; per-body cost is the delta and
+  total = c(1) + (n_bodies - 1) * (c(2) - c(1)).
+The same extrapolation applies to collective bytes parsed from the
+post-SPMD HLO text (collectives inside the scanned while body also appear
+once).  Embed/head/optimizer costs cancel in the delta and are captured by
+the depth-1 base term.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes of every collective op in (post-SPMD) HLO text.
+
+    Note: these are per-SHARD shapes (post-partitioning), i.e. bytes moved
+    per device — which is what the roofline term wants.
+    """
+    out = {k: 0 for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.search(r"=\s+(\S+)\s+([\w-]+)\(", line)
+        if not m:
+            continue
+        op = m.group(2)
+        kind = next((k for k in _COLL_KINDS if op == k or
+                     op.startswith(k + ".")), None)
+        if kind is None:
+            continue
+        # operand types appear inside the call parens
+        args = line[m.end():line.rfind(")")]
+        b = _shape_bytes(args)
+        if b == 0:                       # fallback: output type
+            b = _shape_bytes(m.group(1))
+        out[kind] += b
+    return out
+
+
+@dataclasses.dataclass
+class CellCost:
+    """All values are PER-DEVICE: XLA cost analysis runs on the partitioned
+    per-device module, and collective shapes in post-SPMD HLO are
+    per-shard."""
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    coll_bytes_per_chip: float   # per-chip collective bytes on the wire
+    coll_by_kind: Dict[str, float]
+
+    def terms(self, analytic_flops_per_chip: Optional[float] = None
+              ) -> Dict[str, float]:
+        f = analytic_flops_per_chip if analytic_flops_per_chip else \
+            self.flops
+        return {
+            "compute_s": f / PEAK_FLOPS,
+            "memory_s": self.hbm_bytes / HBM_BW,
+            "collective_s": self.coll_bytes_per_chip / ICI_BW,
+        }
+
+
+def extract_cost(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis() or {}
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+    }
+
+
+def extrapolate(c1: Dict, c2: Dict, coll1: Dict, coll2: Dict,
+                n_bodies: int) -> CellCost:
+    """Two-point depth extrapolation (see module docstring)."""
+    flops = c1["flops"] + (n_bodies - 1) * max(
+        0.0, c2["flops"] - c1["flops"])
+    byts = c1["bytes"] + (n_bodies - 1) * max(
+        0.0, c2["bytes"] - c1["bytes"])
+    per_kind = {}
+    total_coll = 0.0
+    for k in _COLL_KINDS:
+        v = coll1.get(k, 0) + (n_bodies - 1) * max(
+            0, coll2.get(k, 0) - coll1.get(k, 0))
+        per_kind[k] = float(v)
+        total_coll += v
+    return CellCost(flops, byts, total_coll, per_kind)
+
+
+def model_flops(cfg, shape, n_active_params: int,
+                total_tokens: Optional[int] = None) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for train;
+    2*N*D for a forward-only (prefill/decode) step."""
+    if total_tokens is None:
+        total_tokens = shape.batch * (shape.seq if shape.kind != "decode"
+                                      else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active_params * total_tokens

@@ -1,0 +1,114 @@
+"""Assigned input-shape sets and ShapeDtypeStruct stand-ins per cell.
+
+Every (arch x shape) pair is a dry-run "cell".  `input_specs()` returns
+weak-type-correct, shardable ShapeDtypeStructs — no device allocation —
+including the stubbed modality-frontend embeddings for [audio]/[vlm].
+
+Skip rules (per assignment):
+  * long_500k needs sub-quadratic attention -> only archs with
+    cfg.subquadratic (gemma2 local/global, jamba, xlstm, mixtral SWA);
+    skipped with a note for pure full-attention archs.
+  * decode shapes are skipped for encoder-only archs (none in this pool;
+    seamless-m4t is enc-dec and DOES decode).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+I32 = jnp.int32
+BF16 = jnp.bfloat16
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# [vlm]: patch embeddings prepended to the text stream
+VLM_PATCH_TOKENS = 1024
+# [audio]: decoder length as a fraction of the encoder frame count
+AUDIO_DEC_FRACTION = 4
+
+
+def cell_supported(cfg: ArchConfig, shape: ShapeSpec) -> Optional[str]:
+    """None if runnable; else a human-readable skip reason."""
+    if cfg.family == "pointcloud":
+        return "point-cloud arch: LM shapes n/a (see paper benchmarks)"
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("pure full-attention arch: long_500k needs sub-quadratic "
+                "attention (skip noted in DESIGN.md)")
+    return None
+
+
+def _positions(cfg: ArchConfig, b: int, s: int):
+    if cfg.mrope:
+        return jax.ShapeDtypeStruct((b, s, 3), I32)
+    return jax.ShapeDtypeStruct((b, s), I32)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Batch ShapeDtypeStructs for the step function of this cell."""
+    b, s = shape.batch, shape.seq
+    if shape.kind == "decode":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, 1), I32),
+            "positions": _positions(cfg, b, 1),
+            "cache_pos": jax.ShapeDtypeStruct((b,), I32),
+        }
+        return batch
+
+    if cfg.family == "audio":
+        s_dec = max(128, s // AUDIO_DEC_FRACTION)
+        batch = {
+            "frame_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), BF16),
+            "enc_positions": jax.ShapeDtypeStruct((b, s), I32),
+            "tokens": jax.ShapeDtypeStruct((b, s_dec), I32),
+            "positions": jax.ShapeDtypeStruct((b, s_dec), I32),
+        }
+        if shape.kind == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((b, s_dec), I32)
+        return batch
+
+    if cfg.family == "vlm":
+        s_img = min(VLM_PATCH_TOKENS, s // 4)
+        s_txt = s - s_img
+        batch = {
+            "patch_embeds": jax.ShapeDtypeStruct((b, s_img, cfg.d_model),
+                                                 BF16),
+            "tokens": jax.ShapeDtypeStruct((b, s_txt), I32),
+            "positions": _positions(cfg, b, s),
+        }
+        if shape.kind == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((b, s), I32)
+        return batch
+
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((b, s), I32),
+        "positions": _positions(cfg, b, s),
+    }
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((b, s), I32)
+    return batch
+
+
+def decode_state_specs(model, cfg: ArchConfig, shape: ShapeSpec):
+    """ShapeDtypeStructs for the decode-state pytree of this cell."""
+    return jax.eval_shape(
+        lambda: model.init_state(shape.batch, shape.seq, BF16))

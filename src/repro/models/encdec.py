@@ -1,0 +1,234 @@
+"""Encoder-decoder backbone for seamless-m4t-medium.
+
+Per the assignment, only the transformer backbone is modelled: the speech
+frontend is a stub — `input_specs()` supplies precomputed frame embeddings
+(B, S_enc, d_model) directly to the encoder.  The decoder is a causal stack
+with cross-attention onto the encoder output; decode caches the self-attn KV
+per layer and the cross-attn K/V once (computed at prefill).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import nn
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _identity_shard(x, names):
+    return x
+
+
+class CrossCache(NamedTuple):
+    k: jnp.ndarray   # (B, S_enc, H, hd) — static after prefill
+    v: jnp.ndarray
+
+
+class DecLayerState(NamedTuple):
+    self_kv: L.KVCache
+    cross: CrossCache
+
+
+# ---------------------------------------------------------------------------
+# cross attention
+# ---------------------------------------------------------------------------
+
+def cross_attention_init(key, cfg: ArchConfig) -> nn.Params:
+    d, h = cfg.d_model, cfg.n_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": nn.dense_init(ks[0], d, h * hd, use_bias=cfg.qkv_bias),
+        "wk": nn.dense_init(ks[1], d, h * hd, use_bias=cfg.qkv_bias),
+        "wv": nn.dense_init(ks[2], d, h * hd, use_bias=cfg.qkv_bias),
+        "wo": nn.dense_init(ks[3], h * hd, d, use_bias=False),
+    }
+
+
+def cross_kv(p, cfg: ArchConfig, enc_out) -> CrossCache:
+    b, se, _ = enc_out.shape
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    k = nn.dense(p["wk"], enc_out).reshape(b, se, h, hd)
+    v = nn.dense(p["wv"], enc_out).reshape(b, se, h, hd)
+    return CrossCache(k, v)
+
+
+def cross_attention_apply(p, cfg: ArchConfig, x, cache: CrossCache,
+                          shard=_identity_shard):
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    q = nn.dense(p["wq"], x).reshape(b, s, h, hd)
+    out = attention_ref(q.transpose(0, 2, 1, 3),
+                        cache.k.transpose(0, 2, 1, 3),
+                        cache.v.transpose(0, 2, 1, 3), causal=False)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return shard(nn.dense(p["wo"], out), ("batch", "seq", "d_model"))
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+def enc_layer_init(key, cfg: ArchConfig) -> nn.Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm_attn": L.norm_init(cfg, cfg.d_model),
+        "attn": L.attention_init(k1, cfg),
+        "norm_ffn": L.norm_init(cfg, cfg.d_model),
+        "ffn": L.mlp_init(k2, cfg),
+    }
+
+
+def enc_layer_apply(p, cfg, x, positions, shard=_identity_shard):
+    h = L.norm_apply(cfg, p["norm_attn"], x)
+    b, s, d = h.shape
+    hh, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = nn.dense(p["attn"]["wq"], h).reshape(b, s, hh, hd)
+    k = nn.dense(p["attn"]["wk"], h).reshape(b, s, hkv, hd)
+    v = nn.dense(p["attn"]["wv"], h).reshape(b, s, hkv, hd)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    o = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                      v.transpose(0, 2, 1, 3), causal=False)   # bidirectional
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, hh * hd)
+    x = x + nn.dense(p["attn"]["wo"], o)
+    x = x + L.mlp_apply(p["ffn"], cfg, L.norm_apply(cfg, p["norm_ffn"], x),
+                        shard=shard)
+    return shard(x, ("batch", "seq", "d_model"))
+
+
+# ---------------------------------------------------------------------------
+# decoder layer
+# ---------------------------------------------------------------------------
+
+def dec_layer_init(key, cfg: ArchConfig) -> nn.Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm_self": L.norm_init(cfg, cfg.d_model),
+        "self": L.attention_init(k1, cfg),
+        "norm_cross": L.norm_init(cfg, cfg.d_model),
+        "cross": cross_attention_init(k2, cfg),
+        "norm_ffn": L.norm_init(cfg, cfg.d_model),
+        "ffn": L.mlp_init(k3, cfg),
+    }
+
+
+def dec_layer_apply(p, cfg, x, positions, *, mode: str, enc_out=None,
+                    state: Optional[DecLayerState] = None, cache_pos=None,
+                    shard=_identity_shard):
+    h = L.norm_apply(cfg, p["norm_self"], x)
+    h, self_kv = L.attention_apply(
+        p["self"], cfg, h, positions, layer_window=None, mode=mode,
+        cache=state.self_kv if state is not None else None,
+        cache_pos=cache_pos, shard=shard)
+    x = x + h
+
+    h = L.norm_apply(cfg, p["norm_cross"], x)
+    if mode == "decode":
+        cc = state.cross
+    else:
+        cc = cross_kv(p["cross"], cfg, enc_out)
+    x = x + cross_attention_apply(p["cross"], cfg, h, cc, shard=shard)
+
+    h = L.norm_apply(cfg, p["norm_ffn"], x)
+    x = x + L.mlp_apply(p["ffn"], cfg, h, shard=shard)
+    new_state = DecLayerState(self_kv, cc) if mode != "train" else None
+    return shard(x, ("batch", "seq", "d_model")), new_state
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def encdec_init(key, cfg: ArchConfig, dtype=jnp.float32) -> nn.Params:
+    ke, kd, kt, kh = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    params = {
+        "embed": nn.embedding_init(kt, cfg.vocab_size, cfg.d_model),
+        "enc_layers": jax.vmap(lambda k: enc_layer_init(k, cfg))(enc_keys),
+        "enc_norm": L.norm_init(cfg, cfg.d_model),
+        "dec_layers": jax.vmap(lambda k: dec_layer_init(k, cfg))(dec_keys),
+        "final_norm": L.norm_init(cfg, cfg.d_model),
+        "lm_head": nn.dense_init(kh, cfg.d_model, cfg.vocab_size,
+                                 use_bias=False),
+    }
+    return nn.cast_floating(params, dtype)
+
+
+def _depth_scan(scan_fn, carry, xs):
+    """lax.scan over layers, unrolled under cost mode (repro.costmode)."""
+    from repro import costmode
+    if not costmode.enabled():
+        return lax.scan(scan_fn, carry, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = scan_fn(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def encode(params, cfg: ArchConfig, frame_embeds, enc_positions,
+           shard=_identity_shard):
+    """frame_embeds (B, S_enc, D): the stubbed audio frontend output."""
+    x = shard(frame_embeds, ("batch", "seq", "d_model"))
+
+    def scan_fn(x, p_layer):
+        return enc_layer_apply(p_layer, cfg, x, enc_positions, shard), None
+
+    x, _ = _depth_scan(scan_fn, x, params["enc_layers"])
+    return L.norm_apply(cfg, params["enc_norm"], x)
+
+
+def encdec_apply(params, cfg: ArchConfig, frame_embeds, enc_positions,
+                 tokens, dec_positions, *, mode: str = "train",
+                 states=None, cache_pos=None, shard=_identity_shard,
+                 remat: bool = False, return_hidden: bool = False):
+    """Returns (logits, new_states, aux=0)."""
+    aux = jnp.zeros((), jnp.float32)
+    x = nn.embed(params["embed"], tokens)
+    x = shard(x, ("batch", "seq", "d_model"))
+
+    if mode == "decode":
+        def scan_fn(x, xs):
+            p_layer, st = xs
+            x, nst = dec_layer_apply(p_layer, cfg, x, dec_positions,
+                                     mode="decode", state=st,
+                                     cache_pos=cache_pos, shard=shard)
+            return x, nst
+        x, new_states = _depth_scan(scan_fn, x,
+                                    (params["dec_layers"], states))
+    else:
+        enc_out = encode(params, cfg, frame_embeds, enc_positions, shard)
+
+        def body(x, p_layer):
+            return dec_layer_apply(p_layer, cfg, x, dec_positions,
+                                   mode=mode, enc_out=enc_out, shard=shard)
+        if remat and mode == "train":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+
+        def scan_fn(x, p_layer):
+            return body(x, p_layer)
+        x, new_states = _depth_scan(scan_fn, x, params["dec_layers"])
+        if mode == "train":
+            new_states = None
+
+    x = L.norm_apply(cfg, params["final_norm"], x)
+    if return_hidden:
+        return x, new_states, aux
+    logits = nn.dense(params["lm_head"], x)
+    return shard(logits, ("batch", "seq", "vocab")), new_states, aux

@@ -1,0 +1,219 @@
+"""Shared LM layers: RoPE/M-RoPE, norms, GQA attention (train/prefill/
+decode), gated MLP.  Everything is mode-explicit and cache-functional so the
+same code path lowers for train_step, prefill and decode dry-runs.
+
+The `shard` argument threads logical-axis sharding constraints
+(distributed/sharding.py) through every layer without coupling model code to
+mesh axes; the default is identity (single device).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import nn
+from repro.configs.base import ArchConfig
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _identity_shard(x, names):
+    return x
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: ArchConfig, d: int) -> nn.Params:
+    return nn.layernorm_init(d) if cfg.norm == "layernorm" \
+        else nn.rmsnorm_init(d)
+
+
+def norm_apply(cfg: ArchConfig, p: nn.Params, x: jnp.ndarray) -> jnp.ndarray:
+    return nn.layernorm(p, x) if cfg.norm == "layernorm" else nn.rmsnorm(p, x)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def _rope_angles(positions: jnp.ndarray, head_dim: int, theta: float,
+                 mrope_sections=None) -> jnp.ndarray:
+    """positions (B, S) or (B, S, 3) -> angles (B, S, head_dim//2).
+
+    M-RoPE (qwen2-vl): the inv-freq spectrum is partitioned into sections,
+    each driven by one of the (t, h, w) position ids.
+    """
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32)
+                                / half * 2.0 + 0.0))
+    if positions.ndim == 2:
+        return positions[..., None].astype(jnp.float32) * inv_freq
+    # M-RoPE: (B, S, 3)
+    assert mrope_sections is not None and sum(mrope_sections) == half
+    parts, start = [], 0
+    for axis, sec in enumerate(mrope_sections):
+        p = positions[..., axis].astype(jnp.float32)
+        parts.append(p[..., None] * inv_freq[start:start + sec])
+        start += sec
+    return jnp.concatenate(parts, axis=-1)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               mrope_sections=None) -> jnp.ndarray:
+    """x (B, S, H, head_dim); split-halves rotation convention."""
+    half = x.shape[-1] // 2
+    ang = _rope_angles(positions, x.shape[-1], theta, mrope_sections)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray   # (B, S_max, Hkv, head_dim)
+    v: jnp.ndarray
+
+
+def attention_init(key, cfg: ArchConfig) -> nn.Params:
+    d, h, hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": nn.dense_init(ks[0], d, h * hd, use_bias=cfg.qkv_bias),
+        "wk": nn.dense_init(ks[1], d, hkv * hd, use_bias=cfg.qkv_bias),
+        "wv": nn.dense_init(ks[2], d, hkv * hd, use_bias=cfg.qkv_bias),
+        "wo": nn.dense_init(ks[3], h * hd, d, use_bias=False),
+    }
+
+
+def _decode_attention(q, cache: KVCache, valid, softcap, scale):
+    """q (B, 1, H, hd) against a cache with an explicit (B, S) validity
+    mask.  Flash-decoding-style: when the cache's S dim is sharded
+    (long_500k), XLA-SPMD turns the softmax reductions into cross-shard
+    collectives."""
+    b, _, h, hd = q.shape
+    hkv = cache.k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, hd).astype(jnp.float32) * scale
+    k = cache.k.astype(jnp.float32)                    # (B, S, Hkv, hd)
+    v = cache.v.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v)
+    return out.reshape(b, 1, h * hd).astype(q.dtype)
+
+
+def attention_apply(p: nn.Params, cfg: ArchConfig, x: jnp.ndarray,
+                    positions: jnp.ndarray, *, layer_window: Optional[int],
+                    mode: str, cache: Optional[KVCache] = None,
+                    cache_pos=None, shard=_identity_shard):
+    """x (B, S, D).  mode: train | prefill | decode.
+
+    layer_window resolves the per-layer SWA (gemma2 local/global).
+    decode: S == 1, cache_pos (B,) int32 current position.
+    Returns (out, new_cache_or_None).
+    """
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    scale = 1.0 / math.sqrt(hd)
+
+    q = nn.dense(p["wq"], x).reshape(b, s, h, hd)
+    k = nn.dense(p["wk"], x).reshape(b, s, hkv, hd)
+    v = nn.dense(p["wv"], x).reshape(b, s, hkv, hd)
+    mrope = cfg.mrope_sections if cfg.mrope else None
+    q = apply_rope(q, positions, cfg.rope_theta, mrope)
+    k = apply_rope(k, positions, cfg.rope_theta, mrope)
+    q = shard(q, ("batch", "seq", "heads", "head_dim"))
+    k = shard(k, ("batch", "seq", "kv_heads", "head_dim"))
+
+    new_cache = None
+    if mode == "decode":
+        assert s == 1 and cache is not None
+        s_cache = cache.k.shape[1]
+        ring = layer_window is not None and s_cache <= layer_window
+        # SWA layers keep a ring buffer of exactly `window` slots; rope is
+        # applied at absolute positions before caching so rotation-order is
+        # irrelevant.
+        slot = cache_pos % s_cache if ring else cache_pos
+        k_full = jax.vmap(lambda c, u, i: lax.dynamic_update_slice(
+            c, u, (i, 0, 0)))(cache.k, k, slot)
+        v_full = jax.vmap(lambda c, u, i: lax.dynamic_update_slice(
+            c, u, (i, 0, 0)))(cache.v, v, slot)
+        new_cache = KVCache(k_full, v_full)
+        kpos = jnp.arange(s_cache)[None, :]            # (1, S)
+        if ring:
+            # absolute position held by slot j given current write pos
+            abs_pos = cache_pos[:, None] - \
+                jnp.mod(cache_pos[:, None] - kpos, s_cache)
+            valid = abs_pos >= 0
+        else:
+            valid = kpos <= cache_pos[:, None]
+            if layer_window is not None:
+                valid &= kpos > cache_pos[:, None] - layer_window
+        out = _decode_attention(q, new_cache, valid, cfg.attn_softcap,
+                                scale)
+    else:
+        if mode == "prefill":
+            new_cache = KVCache(k, v)
+        out = attention_ref(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True, window=layer_window,
+            softcap=cfg.attn_softcap, scale=scale)
+        out = out.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+
+    out = nn.dense(p["wo"], out)
+    return shard(out, ("batch", "seq", "d_model")), new_cache
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, cfg.n_kv_heads, hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ArchConfig, d_ff: Optional[int] = None) -> nn.Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"wi": nn.dense_init(ks[0], d, f, use_bias=False),
+         "wo": nn.dense_init(ks[1], f, d, use_bias=False)}
+    if cfg.gated_mlp:
+        p["wg"] = nn.dense_init(ks[2], d, f, use_bias=False)
+    return p
+
+
+def mlp_apply(p: nn.Params, cfg: ArchConfig, x: jnp.ndarray,
+              shard=_identity_shard) -> jnp.ndarray:
+    act = act_fn(cfg.act)
+    h = nn.dense(p["wi"], x)
+    if "wg" in p:
+        h = act(nn.dense(p["wg"], x)) * h
+    else:
+        h = act(h)
+    h = shard(h, ("batch", "seq", "d_ff"))
+    return shard(nn.dense(p["wo"], h), ("batch", "seq", "d_model"))

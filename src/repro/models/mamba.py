@@ -1,0 +1,169 @@
+"""Mamba (S6) selective-scan block for the jamba hybrid architecture.
+
+Train/prefill: chunked parallel scan — `lax.scan` over sequence chunks with
+a `lax.associative_scan` inside each chunk, carrying the (B, d_inner,
+d_state) SSM state across chunks.  This bounds the materialised state tensor
+to (chunk, B, d_inner, d_state) (the Mamba-2/SSD trick, adapted), which is
+what makes the 52B jamba fit at seq 4k.
+
+Decode: O(1) recurrent step carrying (conv_state, ssm_state).
+
+TP sharding: d_inner is the sharded axis (conv is depthwise -> no
+cross-channel comm; x_proj/dt_proj contract over it with a psum inserted by
+SPMD), threaded via the `shard` callback.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import nn
+from repro.configs.base import ArchConfig
+
+
+class MambaState(NamedTuple):
+    conv: jnp.ndarray    # (B, d_conv - 1, d_inner)
+    ssm: jnp.ndarray     # (B, d_inner, d_state)
+
+
+def _identity_shard(x, names):
+    return x
+
+
+def mamba_init(key, cfg: ArchConfig) -> nn.Params:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.d_state
+    dt_rank = max(1, math.ceil(d / 16))
+    ks = jax.random.split(key, 7)
+    p = {
+        "in_proj": nn.dense_init(ks[0], d, 2 * di, use_bias=False),
+        "conv_w": jax.random.normal(ks[1], (cfg.d_conv, di)) * 0.1,
+        "conv_b": jnp.zeros((di,)),
+        "x_proj": nn.dense_init(ks[2], di, dt_rank + 2 * n, use_bias=False),
+        "dt_proj": nn.dense_init(ks[3], dt_rank, di, use_bias=True),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))),
+        "D": jnp.ones((di,)),
+        "out_proj": nn.dense_init(ks[4], di, d, use_bias=False),
+    }
+    return p
+
+
+def _split_xproj(cfg: ArchConfig, dbc: jnp.ndarray):
+    d = cfg.d_model
+    n = cfg.d_state
+    dt_rank = max(1, math.ceil(d / 16))
+    return (dbc[..., :dt_rank], dbc[..., dt_rank:dt_rank + n],
+            dbc[..., dt_rank + n:])
+
+
+def _ssm_inputs(p, cfg, x):
+    """x (B, S, di) post-conv -> (da, u, C) scan inputs.
+
+    da (B,S,di,N) decay, u (B,S,di,N) injection, C (B,S,N) readout."""
+    dt_r, B, C = _split_xproj(cfg, nn.dense(p["x_proj"], x))
+    dt = jax.nn.softplus(
+        nn.dense(p["dt_proj"], dt_r)).astype(jnp.float32)    # (B,S,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # (di, N)
+    da = jnp.exp(dt[..., None] * A[None, None])              # (B,S,di,N)
+    # scan runs in f32: mixing dtypes breaks associative_scan's concat
+    u = (dt * x.astype(jnp.float32))[..., None] \
+        * B.astype(jnp.float32)[:, :, None, :]               # (B,S,di,N)
+    return da, u, C
+
+
+def _scan_combine(a, b):
+    (a1, u1), (a2, u2) = a, b
+    return a2 * a1, a2 * u1 + u2
+
+
+def selective_scan(p, cfg, x, h0: Optional[jnp.ndarray] = None,
+                   chunk: int = 128):
+    """x (B, S, di) -> (y (B, S, di), h_final (B, di, N))."""
+    b, s, di = x.shape
+    n = cfg.d_state
+    da, u, c = _ssm_inputs(p, cfg, x)
+    h0 = h0 if h0 is not None else jnp.zeros((b, di, n), jnp.float32)
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    n_chunks = s // chunk
+    # (n_chunks, chunk, B, di, N): the (chunk, B, di, N) state tensor is the
+    # only transient — never materialise (B, S, di, N).
+    da_c = da.reshape(b, n_chunks, chunk, di, n).transpose(1, 2, 0, 3, 4)
+    u_c = u.reshape(b, n_chunks, chunk, di, n).transpose(1, 2, 0, 3, 4)
+    c_c = c.astype(jnp.float32) \
+        .reshape(b, n_chunks, chunk, n).transpose(1, 2, 0, 3)
+
+    @jax.checkpoint
+    def step(h, xs):
+        # checkpointed: backward recomputes the chunk internals instead of
+        # saving (chunk, B, di, N) tensors for every chunk
+        da_i, u_i, c_i = xs
+        acum, ucum = lax.associative_scan(_scan_combine, (da_i, u_i), axis=0)
+        h_t = acum * h[None] + ucum                          # (chunk,B,di,N)
+        y_i = jnp.einsum("cbdn,cbn->cbd", h_t, c_i)
+        return h_t[-1], y_i
+
+    h_final, y = lax.scan(step, h0, (da_c, u_c, c_c))
+    y = y.reshape(n_chunks * chunk, b, di).transpose(1, 0, 2)  # (B,S,di)
+    return y.astype(x.dtype), h_final
+
+
+def _causal_conv(p, cfg, x, conv_state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv, k = d_conv.  x (B, S, di)."""
+    k = cfg.d_conv
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                   # (B, S+k-1, di)
+    out = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i]
+              for i in range(k))
+    new_state = xp[:, -(k - 1):]
+    return out + p["conv_b"], new_state
+
+
+def mamba_apply(p: nn.Params, cfg: ArchConfig, x: jnp.ndarray, *,
+                mode: str, state: Optional[MambaState] = None,
+                shard=_identity_shard):
+    """x (B, S, D).  Returns (out, new_state_or_None)."""
+    b, s, d = x.shape
+    di = cfg.ssm_expand * d
+
+    xz = nn.dense(p["in_proj"], x)
+    xin, z = xz[..., :di], xz[..., di:]
+    xin = shard(xin, ("batch", "seq", "d_inner"))
+
+    if mode == "decode":
+        assert state is not None and s == 1
+        xc, conv_state = _causal_conv(p, cfg, xin, state.conv)
+        xc = jax.nn.silu(xc)
+        da, u, c = _ssm_inputs(p, cfg, xc)
+        h = da[:, 0] * state.ssm + u[:, 0]                   # (B, di, N)
+        y = jnp.einsum("bdn,bn->bd", h, c[:, 0].astype(jnp.float32))[:, None]
+        new_state = MambaState(conv_state, h)
+    else:
+        xc, conv_state = _causal_conv(p, cfg, xin)
+        xc = jax.nn.silu(xc)
+        y, h_final = selective_scan(p, cfg, xc)
+        new_state = MambaState(conv_state, h_final) if mode == "prefill" \
+            else None
+
+    y = y.astype(x.dtype) + p["D"] * xc
+    out = nn.dense(p["out_proj"], y * jax.nn.silu(z))
+    return shard(out, ("batch", "seq", "d_model")), new_state
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int,
+                     dtype=jnp.float32) -> MambaState:
+    di = cfg.ssm_expand * cfg.d_model
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.d_conv - 1, di), dtype),
+        ssm=jnp.zeros((batch, di, cfg.d_state), jnp.float32))

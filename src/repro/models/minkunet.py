@@ -1,0 +1,154 @@
+"""MinkowskiUNet-style sparse conv U-Net (paper's MinkNet(i)/(o) benchmark)
+plus the Mini-MinkowskiUNet co-design (paper §5.2.2 / Fig. 16).
+
+Structure: submanifold stem -> N encoder stages (stride-2 down conv +
+residual blocks) -> N decoder stages (transposed conv back onto the cached
+finer cloud + skip concat + residual blocks) -> linear head.
+
+All kernel maps are computed once per resolution level by the Mapping Unit
+and shared across every conv at that level (MinkowskiEngine-style map
+caching); transposed convs reuse the downsampling maps swapped — both are
+PointAcc dataflows.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.core import mapping as M
+from repro.core import sparseconv as SC
+
+
+def conv_w_init(key, k: int, c_in: int, c_out: int, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(k * c_in)
+    return jax.random.uniform(key, (k, c_in, c_out), dtype, -scale, scale)
+
+
+def _block_init(key, c_in: int, c_out: int):
+    ks = jax.random.split(key, 4)
+    p = {
+        "conv1": conv_w_init(ks[0], 27, c_in, c_out),
+        "n1": nn.layernorm_init(c_out),
+        "conv2": conv_w_init(ks[1], 27, c_out, c_out),
+        "n2": nn.layernorm_init(c_out),
+    }
+    if c_in != c_out:
+        p["proj"] = nn.dense_init(ks[2], c_in, c_out, use_bias=False)
+    return p
+
+
+def _block_apply(p, feats, maps, out_cap, mask, flow):
+    h = SC.sparse_conv_apply(feats, maps, p["conv1"], out_cap, flow)
+    h = jax.nn.relu(nn.layernorm(p["n1"], h))
+    h = SC.sparse_conv_apply(h, maps, p["conv2"], out_cap, flow)
+    h = nn.layernorm(p["n2"], h)
+    skip = nn.dense(p["proj"], feats) if "proj" in p else feats
+    return jax.nn.relu(h + skip) * mask[:, None]
+
+
+def minkunet_init(key, c_in: int = 4, n_classes: int = 13,
+                  stem: int = 32,
+                  enc_planes: Sequence[int] = (32, 64, 128, 256),
+                  dec_planes: Sequence[int] = (256, 128, 96, 96),
+                  blocks_per_stage: int = 2):
+    n_stages = len(enc_planes)
+    keys = iter(jax.random.split(key, 4 + 4 * n_stages * (blocks_per_stage
+                                                          + 1)))
+    params = {"stem": conv_w_init(next(keys), 27, c_in, stem),
+              "stem_n": nn.layernorm_init(stem)}
+    c = stem
+    enc = []
+    for i, planes in enumerate(enc_planes):
+        stage = {"down": conv_w_init(next(keys), 8, c, planes),
+                 "down_n": nn.layernorm_init(planes),
+                 "blocks": []}
+        c = planes
+        for _ in range(blocks_per_stage):
+            stage["blocks"].append(_block_init(next(keys), c, planes))
+        enc.append(stage)
+    params["enc"] = enc
+    dec = []
+    skip_cs = [stem] + list(enc_planes[:-1])
+    for i, planes in enumerate(dec_planes):
+        stage = {"up": conv_w_init(next(keys), 8, c, planes),
+                 "up_n": nn.layernorm_init(planes),
+                 "blocks": []}
+        c_cat = planes + skip_cs[-(i + 1)]
+        cb = c_cat
+        for _ in range(blocks_per_stage):
+            stage["blocks"].append(_block_init(next(keys), cb, planes))
+            cb = planes
+        dec.append(stage)
+        c = planes
+    params["dec"] = dec
+    params["head"] = nn.dense_init(next(keys), c, n_classes)
+    return params
+
+
+def build_unet_maps(pc: M.PointCloud, n_stages: int):
+    """Mapping-Unit pass: clouds + kernel maps for every resolution level.
+
+    Returns per-level dicts with the submanifold (k=3) maps, the stride-2
+    down maps into the next level, and the level's point cloud.  Decoder
+    reuses `down` swapped.
+    """
+    levels = []
+    cur = pc
+    for i in range(n_stages + 1):
+        subm, _ = M.build_conv_maps(cur, kernel_size=3, stride=1)
+        level = {"pc": cur, "subm": subm}
+        if i < n_stages:
+            down, nxt = M.build_conv_maps(cur, kernel_size=2, stride=2)
+            level["down"] = down
+            cur = nxt
+        levels.append(level)
+    return levels
+
+
+def minkunet_apply(params, pc: M.PointCloud, feats: jnp.ndarray,
+                   flow: str = "fod", levels=None):
+    n_stages = len(params["enc"])
+    if levels is None:
+        levels = build_unet_maps(pc, n_stages)
+
+    l0 = levels[0]
+    h = SC.sparse_conv_apply(feats, l0["subm"], params["stem"],
+                             l0["pc"].capacity, flow)
+    h = jax.nn.relu(nn.layernorm(params["stem_n"], h)) * l0["pc"].mask[:, None]
+
+    skips = [h]
+    for i, stage in enumerate(params["enc"]):
+        lvl, nxt = levels[i], levels[i + 1]
+        h = SC.sparse_conv_apply(h, lvl["down"], stage["down"],
+                                 nxt["pc"].capacity, flow)
+        h = jax.nn.relu(nn.layernorm(stage["down_n"], h)) \
+            * nxt["pc"].mask[:, None]
+        for b in stage["blocks"]:
+            h = _block_apply(b, h, nxt["subm"], nxt["pc"].capacity,
+                             nxt["pc"].mask, flow)
+        skips.append(h)
+
+    for i, stage in enumerate(params["dec"]):
+        lvl = levels[n_stages - 1 - i]          # target (finer) level
+        h = SC.sparse_conv_transposed(h, lvl["down"], lvl["pc"],
+                                      stage["up"], flow)
+        h = jax.nn.relu(nn.layernorm(stage["up_n"], h)) \
+            * lvl["pc"].mask[:, None]
+        h = jnp.concatenate([h, skips[n_stages - 1 - i]], axis=-1)
+        for b in stage["blocks"]:
+            h = _block_apply(b, h, lvl["subm"], lvl["pc"].capacity,
+                             lvl["pc"].mask, flow)
+
+    return nn.dense(params["head"], h) * pc.mask[:, None]
+
+
+def mini_minkunet_init(key, c_in: int = 4, n_classes: int = 13):
+    """The paper's co-designed shallow/narrow MinkowskiUNet (Fig. 16)."""
+    return minkunet_init(key, c_in, n_classes, stem=16,
+                         enc_planes=(16, 32), dec_planes=(32, 16),
+                         blocks_per_stage=1)

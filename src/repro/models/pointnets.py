@@ -1,0 +1,231 @@
+"""PointNet / PointNet++ / DGCNN family (paper Table 1, PointNet++-based).
+
+Dense-batched representation: xyz (B, N, 3) float32, mask (B, N) bool.
+Mapping ops (FPS / ball query / kNN) come from repro.core.pointops — the
+ranking-based Mapping Unit.  Aggregation is masked max-pooling (paper
+Table 1: MaxPool).  T-Nets are omitted (they do not change the system-level
+compute structure); noted in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.core import pointops as P
+
+_NEG = jnp.float32(-1e9)
+
+
+# ---------------------------------------------------------------------------
+# shared building blocks
+# ---------------------------------------------------------------------------
+
+def masked_max(x: jnp.ndarray, mask: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Max-pool ignoring invalid slots; all-invalid groups produce 0."""
+    big = jnp.where(mask, 0.0, _NEG)
+    y = jnp.max(x + jnp.expand_dims(big, -1), axis=axis)
+    any_valid = jnp.any(mask, axis=axis)
+    return jnp.where(any_valid[..., None], y, 0.0)
+
+
+def set_abstraction_init(key, c_in: int, mlp: Sequence[int]) -> nn.Params:
+    return {"mlp": nn.mlp_chain_init(key, [c_in + 3] + list(mlp))}
+
+
+def set_abstraction(p: nn.Params, xyz, feats, mask, n_out: int,
+                    radius: float, k: int):
+    """FPS (Max ranking) -> ball query (TopK ranking) -> shared MLP -> max."""
+    centers = P.farthest_point_sampling(xyz, mask, n_out)     # (B, M)
+    new_xyz = P.gather_points(xyz, centers)
+    new_mask = P.gather_points(mask[..., None], centers)[..., 0]
+    idx, valid = P.ball_query(new_xyz, new_mask, xyz, mask, radius, k)
+    grouped_xyz = P.gather_points(xyz, idx) - new_xyz[:, :, None, :]
+    if feats is not None:
+        grouped = jnp.concatenate(
+            [grouped_xyz, P.gather_points(feats, idx)], axis=-1)
+    else:
+        grouped = grouped_xyz
+    g = nn.mlp_chain(p["mlp"], grouped)                       # (B,M,k,C)
+    valid = valid & new_mask[:, :, None]
+    new_f = masked_max(g, valid, axis=2)
+    return new_xyz, new_f * new_mask[..., None], new_mask
+
+
+def global_abstraction_init(key, c_in: int, mlp: Sequence[int]) -> nn.Params:
+    return {"mlp": nn.mlp_chain_init(key, [c_in + 3] + list(mlp))}
+
+
+def global_abstraction(p, xyz, feats, mask):
+    g = jnp.concatenate([xyz, feats], axis=-1)
+    g = nn.mlp_chain(p["mlp"], g)
+    return masked_max(g, mask, axis=1)                        # (B, C)
+
+
+def feature_propagation_init(key, c_in: int, mlp: Sequence[int]) -> nn.Params:
+    return {"mlp": nn.mlp_chain_init(key, [c_in] + list(mlp))}
+
+
+def feature_propagation(p, xyz_fine, mask_fine, xyz_coarse, mask_coarse,
+                        f_coarse, f_skip):
+    """3-NN inverse-distance interpolation (kNN = TopK ranking) + MLP."""
+    idx, dist = P.knn(xyz_fine, mask_fine, xyz_coarse, mask_coarse, 3)
+    w = 1.0 / (dist + 1e-8)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    interp = jnp.einsum("bmk,bmkc->bmc", w, P.gather_points(f_coarse, idx))
+    f = jnp.concatenate([interp, f_skip], axis=-1) if f_skip is not None \
+        else interp
+    return nn.mlp_chain(p["mlp"], f) * mask_fine[..., None]
+
+
+# ---------------------------------------------------------------------------
+# PointNet (classification)
+# ---------------------------------------------------------------------------
+
+def pointnet_init(key, n_classes: int = 40, width: int = 1) -> nn.Params:
+    k1, k2 = jax.random.split(key)
+    w = width
+    return {
+        "feat": nn.mlp_chain_init(k1, [3, 64 * w, 64 * w, 64 * w,
+                                       128 * w, 1024 * w]),
+        "head": nn.mlp_chain_init(k2, [1024 * w, 512 * w, 256 * w,
+                                       n_classes]),
+    }
+
+
+def pointnet_apply(params, xyz, mask):
+    f = nn.mlp_chain(params["feat"], xyz)
+    g = masked_max(f, mask, axis=1)
+    return nn.mlp_chain(params["head"], g, final_act=False)
+
+
+# ---------------------------------------------------------------------------
+# PointNet++ SSG (classification) — paper's PointNet++(c)
+# ---------------------------------------------------------------------------
+
+def pointnetpp_cls_init(key, n_classes: int = 40, width: int = 1):
+    ks = jax.random.split(key, 4)
+    w = width
+    return {
+        "sa1": set_abstraction_init(ks[0], 0, [64 * w, 64 * w, 128 * w]),
+        "sa2": set_abstraction_init(ks[1], 128 * w,
+                                    [128 * w, 128 * w, 256 * w]),
+        "sa3": global_abstraction_init(ks[2], 256 * w,
+                                       [256 * w, 512 * w, 1024 * w]),
+        "head": nn.mlp_chain_init(ks[3], [1024 * w, 512 * w, 256 * w,
+                                          n_classes]),
+    }
+
+
+def pointnetpp_cls_apply(params, xyz, mask, n1=512, n2=128):
+    x1, f1, m1 = set_abstraction(params["sa1"], xyz, None, mask, n1, 0.2, 32)
+    x2, f2, m2 = set_abstraction(params["sa2"], x1, f1, m1, n2, 0.4, 64)
+    g = global_abstraction(params["sa3"], x2, f2, m2)
+    return nn.mlp_chain(params["head"], g, final_act=False)
+
+
+# ---------------------------------------------------------------------------
+# PointNet++ segmentation (SSG) — paper's PointNet++(s) / (ps) backbone
+# ---------------------------------------------------------------------------
+
+def pointnetpp_seg_init(key, n_classes: int = 13, c_in: int = 0,
+                        width: int = 1):
+    ks = jax.random.split(key, 6)
+    w = width
+    return {
+        "sa1": set_abstraction_init(ks[0], c_in, [32 * w, 32 * w, 64 * w]),
+        "sa2": set_abstraction_init(ks[1], 64 * w, [64 * w, 64 * w, 128 * w]),
+        "fp2": feature_propagation_init(ks[2], 128 * w + 64 * w,
+                                        [128 * w, 64 * w]),
+        "fp1": feature_propagation_init(ks[3], 64 * w + c_in,
+                                        [64 * w, 64 * w]),
+        "head": nn.mlp_chain_init(ks[4], [64 * w, 64 * w, n_classes]),
+    }
+
+
+def pointnetpp_seg_apply(params, xyz, mask, feats=None, n1=256, n2=64,
+                         return_features: bool = False):
+    x1, f1, m1 = set_abstraction(params["sa1"], xyz, feats, mask,
+                                 n1, 0.1, 32)
+    x2, f2, m2 = set_abstraction(params["sa2"], x1, f1, m1, n2, 0.2, 32)
+    u1 = feature_propagation(params["fp2"], x1, m1, x2, m2, f2, f1)
+    u0 = feature_propagation(params["fp1"], xyz, mask, x1, m1, u1, feats)
+    logits = nn.mlp_chain(params["head"], u0, final_act=False)
+    if return_features:
+        return logits, u0
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# DGCNN — graph-based: kNN on *features* (paper §2: mapping on features)
+# ---------------------------------------------------------------------------
+
+def edgeconv_init(key, c_in: int, c_out: int):
+    return {"mlp": nn.mlp_chain_init(key, [2 * c_in, c_out])}
+
+
+def edgeconv(p, feats, mask, k: int):
+    idx, _ = P.knn(feats, mask, feats, mask, k)
+    nbrs = P.gather_points(feats, idx)                        # (B,N,k,C)
+    center = feats[:, :, None, :]
+    edge = jnp.concatenate([center * jnp.ones_like(nbrs), nbrs - center],
+                           axis=-1)
+    e = nn.mlp_chain(p["mlp"], edge)
+    valid = mask[:, :, None] & P.gather_points(mask[..., None], idx)[..., 0]
+    return masked_max(e, valid, axis=2) * mask[..., None]
+
+
+def dgcnn_init(key, n_classes: int = 16, width: int = 1):
+    ks = jax.random.split(key, 5)
+    w = width
+    return {
+        "ec1": edgeconv_init(ks[0], 3, 64 * w),
+        "ec2": edgeconv_init(ks[1], 64 * w, 64 * w),
+        "ec3": edgeconv_init(ks[2], 64 * w, 128 * w),
+        "agg": nn.mlp_chain_init(ks[3], [(64 + 64 + 128) * w, 1024 * w]),
+        "head": nn.mlp_chain_init(ks[4], [1024 * w, 256 * w, n_classes]),
+    }
+
+
+def dgcnn_apply(params, xyz, mask, k: int = 20):
+    f1 = edgeconv(params["ec1"], xyz, mask, k)
+    f2 = edgeconv(params["ec2"], f1, mask, k)
+    f3 = edgeconv(params["ec3"], f2, mask, k)
+    f = jnp.concatenate([f1, f2, f3], axis=-1)
+    f = nn.mlp_chain(params["agg"], f)
+    g = masked_max(f, mask, axis=1)
+    return nn.mlp_chain(params["head"], g, final_act=False)
+
+
+# ---------------------------------------------------------------------------
+# F-PointNet++ (detection): instance seg + centre/box regression heads
+# ---------------------------------------------------------------------------
+
+def fpointnetpp_init(key, n_box_params: int = 7, width: int = 1):
+    ks = jax.random.split(key, 3)
+    w = width
+    return {
+        "seg": pointnetpp_seg_init(ks[0], n_classes=2, width=w),
+        "center": nn.mlp_chain_init(ks[1], [64 * w + 3, 128 * w, 3]),
+        "box": nn.mlp_chain_init(ks[2], [64 * w + 3, 256 * w,
+                                         n_box_params]),
+    }
+
+
+def fpointnetpp_apply(params, xyz, mask):
+    """Frustum pipeline: instance seg -> foreground-weighted pooling ->
+    centre + box regression (the paper's detection benchmark structure)."""
+    seg_logits, feats = pointnetpp_seg_apply(params["seg"], xyz, mask,
+                                             return_features=True)
+    fg = jax.nn.softmax(seg_logits, -1)[..., 1:2] * mask[..., None]
+    denom = jnp.sum(fg, axis=1) + 1e-6
+    pooled_f = jnp.sum(fg * feats, axis=1) / denom            # (B, 64w)
+    centroid = jnp.sum(fg * xyz, axis=1) / denom              # (B, 3)
+    h = jnp.concatenate([pooled_f, centroid], axis=-1)
+    center = centroid + nn.mlp_chain(params["center"], h, final_act=False)
+    box = nn.mlp_chain(params["box"], h, final_act=False)
+    return {"seg": seg_logits, "center": center, "box": box}

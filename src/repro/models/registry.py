@@ -1,0 +1,162 @@
+"""Uniform model API over every assigned architecture family.
+
+build(cfg) -> Model with:
+  init(key, dtype)                          -> params
+  train_logits(params, batch, ...)          -> (logits, aux)
+  prefill(params, batch, ...)               -> (logits, states, aux)
+  decode(params, batch, states, ...)        -> (logits, states, aux)
+  init_state(batch_size, max_len, ...)      -> decode-state pytree
+
+batch dict keys by family:
+  lm:    tokens (B,S) positions (B,S) [labels]
+  vlm:   + patch_embeds (B,S_img,D); positions (B,S_tot,3)
+  audio: frame_embeds (B,S_enc,D) enc_positions tokens (B,S_dec) positions
+decode: tokens (B,1), positions (B,1[,3]), cache_pos (B,)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec as ED
+from repro.models import lm as LM
+
+
+def _identity_shard(x, names):
+    return x
+
+
+class Model(NamedTuple):
+    cfg: ArchConfig
+    init: Callable
+    train_logits: Callable
+    prefill: Callable
+    decode: Callable
+    init_state: Callable
+    train_hidden: Callable     # final-normed hidden states (for chunked CE)
+    head_info: Callable        # params -> (head_w, transpose, softcap)
+
+
+def default_moe_impl(cfg: ArchConfig, mode: str, mesh=None) -> str:
+    if not cfg.n_experts:
+        return "dense"
+    if mesh is not None and mode in ("train", "prefill"):
+        return "ep"        # sharded sorted dispatch
+    if mode == "decode":
+        return "dense"     # a handful of tokens: G-M-S is optimal here
+    return "sorted"
+
+
+def build(cfg: ArchConfig) -> Model:
+    if cfg.family == "audio":
+        return _build_encdec(cfg)
+    return _build_lm(cfg)
+
+
+def _build_lm(cfg: ArchConfig) -> Model:
+    def init(key, dtype=jnp.float32):
+        return LM.lm_init(key, cfg, dtype)
+
+    def train_logits(params, batch, shard=_identity_shard, mesh=None,
+                     moe_impl: Optional[str] = None, remat: bool = False):
+        impl = moe_impl or default_moe_impl(cfg, "train", mesh)
+        logits, _, aux = LM.lm_apply(
+            params, cfg, batch["tokens"], batch["positions"], mode="train",
+            shard=shard, moe_impl=impl, mesh=mesh, remat=remat,
+            embeds=batch.get("patch_embeds"))
+        return logits, aux
+
+    def train_hidden(params, batch, shard=_identity_shard, mesh=None,
+                     moe_impl: Optional[str] = None, remat: bool = False):
+        impl = moe_impl or default_moe_impl(cfg, "train", mesh)
+        x, _, aux = LM.lm_apply(
+            params, cfg, batch["tokens"], batch["positions"], mode="train",
+            shard=shard, moe_impl=impl, mesh=mesh, remat=remat,
+            embeds=batch.get("patch_embeds"), return_hidden=True)
+        from repro.models.layers import norm_apply
+        return norm_apply(cfg, params["final_norm"], x), aux
+
+    def head_info(params):
+        if cfg.tie_embeddings:
+            return params["embed"]["emb"], True, cfg.final_softcap
+        return params["lm_head"]["w"], False, cfg.final_softcap
+
+    def prefill(params, batch, shard=_identity_shard, mesh=None,
+                moe_impl: Optional[str] = None):
+        impl = moe_impl or default_moe_impl(cfg, "prefill", mesh)
+        return LM.lm_apply(
+            params, cfg, batch["tokens"], batch["positions"],
+            mode="prefill", shard=shard, moe_impl=impl, mesh=mesh,
+            embeds=batch.get("patch_embeds"))
+
+    def decode(params, batch, states, shard=_identity_shard, mesh=None,
+               moe_impl: Optional[str] = None):
+        impl = moe_impl or default_moe_impl(cfg, "decode", mesh)
+        return LM.lm_apply(
+            params, cfg, batch["tokens"], batch["positions"], mode="decode",
+            states=states, cache_pos=batch["cache_pos"], shard=shard,
+            moe_impl=impl, mesh=mesh)
+
+    def init_state(batch_size, max_len, dtype=jnp.bfloat16):
+        return LM.init_lm_state(cfg, batch_size, max_len, dtype)
+
+    return Model(cfg, init, train_logits, prefill, decode, init_state,
+                 train_hidden, head_info)
+
+
+def _build_encdec(cfg: ArchConfig) -> Model:
+    def init(key, dtype=jnp.float32):
+        return ED.encdec_init(key, cfg, dtype)
+
+    def train_logits(params, batch, shard=_identity_shard, mesh=None,
+                     moe_impl=None, remat: bool = False):
+        logits, _, aux = ED.encdec_apply(
+            params, cfg, batch["frame_embeds"], batch["enc_positions"],
+            batch["tokens"], batch["positions"], mode="train", shard=shard,
+            remat=remat)
+        return logits, aux
+
+    def train_hidden(params, batch, shard=_identity_shard, mesh=None,
+                     moe_impl=None, remat: bool = False):
+        x, _, aux = ED.encdec_apply(
+            params, cfg, batch["frame_embeds"], batch["enc_positions"],
+            batch["tokens"], batch["positions"], mode="train", shard=shard,
+            remat=remat, return_hidden=True)
+        return x, aux
+
+    def head_info(params):
+        return params["lm_head"]["w"], False, None
+
+    def prefill(params, batch, shard=_identity_shard, mesh=None,
+                moe_impl=None):
+        return ED.encdec_apply(
+            params, cfg, batch["frame_embeds"], batch["enc_positions"],
+            batch["tokens"], batch["positions"], mode="prefill", shard=shard)
+
+    def decode(params, batch, states, shard=_identity_shard, mesh=None,
+               moe_impl=None):
+        return ED.encdec_apply(
+            params, cfg, None, None, batch["tokens"], batch["positions"],
+            mode="decode", states=states, cache_pos=batch["cache_pos"],
+            shard=shard)
+
+    def init_state(batch_size, max_len, dtype=jnp.bfloat16,
+                   enc_len: Optional[int] = None):
+        enc_len = enc_len or max_len
+        hd = cfg.resolved_head_dim
+        from repro.models.layers import KVCache, init_kv_cache
+        one = ED.DecLayerState(
+            self_kv=init_kv_cache(cfg, batch_size, max_len, dtype),
+            cross=ED.CrossCache(
+                jnp.zeros((batch_size, enc_len, cfg.n_heads, hd), dtype),
+                jnp.zeros((batch_size, enc_len, cfg.n_heads, hd), dtype)))
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)
+
+    return Model(cfg, init, train_logits, prefill, decode, init_state,
+                 train_hidden, head_info)

@@ -1,0 +1,259 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise
+recurrent form) and sLSTM (scalar memory, sequential scan).
+
+mLSTM is a decayed linear attention with exponential gating and a max
+stabiliser.  Both the stabiliser recurrence  m_t = max(m_{t-1} + f_t, i_t)
+(a max-plus scan) and the memory recurrence  C_t = a_t C_{t-1} + b_t
+are associative, so training/prefill runs as `lax.scan` over sequence chunks
+with `lax.associative_scan` inside — the same pattern as the Mamba block,
+keeping the transient (chunk, B, H, dk, dv) bounded.
+
+Decode is the O(1) recurrent step on (C, n, m) / sLSTM (c, n, h, m).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import nn
+from repro.configs.base import ArchConfig
+
+
+def _identity_shard(x, names):
+    return x
+
+
+class MLSTMState(NamedTuple):
+    c: jnp.ndarray    # (B, H, dk, dv)
+    n: jnp.ndarray    # (B, H, dk)
+    m: jnp.ndarray    # (B, H)
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray    # (B, D)
+    n: jnp.ndarray
+    h: jnp.ndarray
+    m: jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _maxplus_combine(x, y):
+    (a1, b1), (a2, b2) = x, y
+    return a1 + a2, jnp.maximum(b1 + a2, b2)
+
+
+def _linear_combine(x, y):
+    (a1, b1), (a2, b2) = x, y
+    return a2 * a1, a2 * b1 + b2
+
+
+def mlstm_cell(q, k, v, i_pre, f_pre, state: Optional[MLSTMState] = None,
+               chunk: int = 16):
+    """q/k (B,S,H,dk), v (B,S,H,dv), i/f pre-activations (B,S,H).
+
+    Returns h (B,S,H,dv) and the final MLSTMState."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    scale = 1.0 / math.sqrt(dk)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    i_pre = i_pre.astype(jnp.float32)
+    f_pre = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))   # log f in (-inf,0)
+
+    if state is None:
+        state = MLSTMState(
+            jnp.zeros((b, h, dk, dv), jnp.float32),
+            jnp.zeros((b, h, dk), jnp.float32),
+            jnp.full((b, h), -1e30, jnp.float32))
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    def to_chunks(x):  # (B,S,...) -> (nc, chunk, B, ...)
+        return x.reshape((b, nc, chunk) + x.shape[2:]) \
+            .transpose((1, 2, 0) + tuple(range(3, x.ndim + 1)))
+
+    qc, kc, vc = to_chunks(qf), to_chunks(kf), to_chunks(vf)
+    ic, fc = to_chunks(i_pre), to_chunks(f_pre)
+
+    @jax.checkpoint
+    def step(carry, xs):
+        # checkpointed: the (chunk, B, H, dk, dv) kv outer products are
+        # recomputed in backward instead of saved per chunk
+        C, n, m = carry
+        q_i, k_i, v_i, ii, fi = xs                 # (chunk, B, H, ...)
+        # stabiliser: m_t = max(m_{t-1} + f_t, i_t)  (max-plus scan)
+        fa, ib = lax.associative_scan(_maxplus_combine, (fi, ii), axis=0)
+        m_t = jnp.maximum(m[None] + fa, ib)        # (chunk, B, H)
+        m_prev = jnp.concatenate([m[None], m_t[:-1]], axis=0)
+        f_eff = jnp.exp(fi + m_prev - m_t)         # (chunk, B, H)
+        i_eff = jnp.exp(ii - m_t)
+        # memory recurrence (linear scan on matrices)
+        kv = k_i[..., :, None] * v_i[..., None, :]           # (c,B,H,dk,dv)
+        a4 = f_eff[..., None, None]
+        b4 = i_eff[..., None, None] * kv
+        acum, bcum = lax.associative_scan(_linear_combine, (a4, b4), axis=0)
+        C_t = acum * C[None] + bcum                          # (c,B,H,dk,dv)
+        a3 = f_eff[..., None]
+        b3 = i_eff[..., None] * k_i
+        acum3, bcum3 = lax.associative_scan(_linear_combine, (a3, b3),
+                                            axis=0)
+        n_t = acum3 * n[None] + bcum3                        # (c,B,H,dk)
+        # readout
+        num = jnp.einsum("cbhd,cbhdv->cbhv", q_i, C_t)
+        den = jnp.abs(jnp.einsum("cbhd,cbhd->cbh", q_i, n_t))
+        den = jnp.maximum(den, jnp.exp(-m_t))
+        h_i = num / den[..., None]
+        return (C_t[-1], n_t[-1], m_t[-1]), h_i
+
+    (C, n, m), hs = lax.scan(step, tuple(state), (qc, kc, vc, ic, fc))
+    h_out = hs.reshape(nc * chunk, b, h, dv).transpose(1, 0, 2, 3)
+    return h_out.astype(q.dtype), MLSTMState(C, n, m)
+
+
+def mlstm_cell_decode(q, k, v, i_pre, f_pre, state: MLSTMState):
+    """Single-step recurrence.  q/k (B,1,H,dk) etc."""
+    b, _, h, dk = q.shape
+    scale = 1.0 / math.sqrt(dk)
+    qf = q[:, 0].astype(jnp.float32) * scale
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    ii = i_pre[:, 0].astype(jnp.float32)
+    ff = jax.nn.log_sigmoid(f_pre[:, 0].astype(jnp.float32))
+    m_t = jnp.maximum(state.m + ff, ii)
+    f_eff = jnp.exp(ff + state.m - m_t)[..., None, None]
+    i_eff = jnp.exp(ii - m_t)[..., None, None]
+    C = f_eff * state.c + i_eff * (kf[..., :, None] * vf[..., None, :])
+    n = f_eff[..., 0] * state.n + i_eff[..., 0] * kf
+    num = jnp.einsum("bhd,bhdv->bhv", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)),
+                      jnp.exp(-m_t))
+    h_out = (num / den[..., None])[:, None]
+    return h_out.astype(q.dtype), MLSTMState(C, n, m_t)
+
+
+def mlstm_block_init(key, cfg: ArchConfig) -> nn.Params:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    hh = cfg.n_heads
+    dk = di // hh
+    ks = jax.random.split(key, 6)
+    return {
+        "up": nn.dense_init(ks[0], d, 2 * di, use_bias=False),
+        "wq": nn.dense_init(ks[1], di, di, use_bias=False),
+        "wk": nn.dense_init(ks[2], di, di, use_bias=False),
+        "wv": nn.dense_init(ks[3], di, di, use_bias=False),
+        "wif": nn.dense_init(ks[4], di, 2 * hh, use_bias=True),
+        "norm": nn.rmsnorm_init(di),
+        "down": nn.dense_init(ks[5], di, d, use_bias=False),
+    }
+
+
+def mlstm_block_apply(p, cfg: ArchConfig, x, *, mode: str,
+                      state: Optional[MLSTMState] = None,
+                      shard=_identity_shard):
+    b, s, d = x.shape
+    di = cfg.ssm_expand * d
+    hh = cfg.n_heads
+    dk = di // hh
+    up = nn.dense(p["up"], x)
+    xm, z = up[..., :di], up[..., di:]
+    xm = shard(xm, ("batch", "seq", "d_inner"))
+    q = nn.dense(p["wq"], xm).reshape(b, s, hh, dk)
+    k = nn.dense(p["wk"], xm).reshape(b, s, hh, dk)
+    v = nn.dense(p["wv"], xm).reshape(b, s, hh, dk)
+    gates = nn.dense(p["wif"], xm).reshape(b, s, hh, 2)
+    i_pre, f_pre = gates[..., 0], gates[..., 1]
+    if mode == "decode":
+        h, new_state = mlstm_cell_decode(q, k, v, i_pre, f_pre, state)
+    else:
+        h, new_state = mlstm_cell(q, k, v, i_pre, f_pre, state=None)
+        if mode != "prefill":
+            new_state = None
+    h = h.reshape(b, s, di)
+    h = nn.rmsnorm(p["norm"], h)
+    out = nn.dense(p["down"], h * jax.nn.silu(z))
+    return shard(out, ("batch", "seq", "d_model")), new_state
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int) -> MLSTMState:
+    di = cfg.ssm_expand * cfg.d_model
+    hh = cfg.n_heads
+    dk = di // hh
+    return MLSTMState(
+        jnp.zeros((batch, hh, dk, dk), jnp.float32),
+        jnp.zeros((batch, hh, dk), jnp.float32),
+        jnp.full((batch, hh), -1e30, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_block_init(key, cfg: ArchConfig) -> nn.Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "wx": nn.dense_init(ks[0], d, 4 * d, use_bias=True),   # z i f o
+        "wr": nn.dense_init(ks[1], d, 4 * d, use_bias=False),  # recurrent
+        "norm": nn.rmsnorm_init(d),
+        "proj": nn.dense_init(ks[2], d, d, use_bias=False),
+    }
+
+
+def _slstm_step(p, cfg, x_t, st: SLSTMState):
+    d = cfg.d_model
+    pre = nn.dense(p["wx"], x_t) + nn.dense(p["wr"], st.h)
+    z = jnp.tanh(pre[..., :d])
+    i_pre = pre[..., d:2 * d].astype(jnp.float32)
+    f_pre = jax.nn.log_sigmoid(pre[..., 2 * d:3 * d].astype(jnp.float32))
+    o = jax.nn.sigmoid(pre[..., 3 * d:])
+    m_t = jnp.maximum(f_pre + st.m, i_pre)
+    i_eff = jnp.exp(i_pre - m_t)
+    f_eff = jnp.exp(f_pre + st.m - m_t)
+    c = f_eff * st.c + i_eff * z.astype(jnp.float32)
+    n = f_eff * st.n + i_eff
+    h = o * (c / jnp.maximum(n, 1e-6)).astype(x_t.dtype)
+    return SLSTMState(c, n, h, m_t)
+
+
+def slstm_block_apply(p, cfg: ArchConfig, x, *, mode: str,
+                      state: Optional[SLSTMState] = None,
+                      shard=_identity_shard):
+    b, s, d = x.shape
+    if state is None:
+        state = init_slstm_state(cfg, b, x.dtype)
+
+    if mode == "decode":
+        new_state = _slstm_step(p, cfg, x[:, 0], state)
+        h = new_state.h[:, None]
+    else:
+        def step(st, x_t):
+            st2 = _slstm_step(p, cfg, x_t, st)
+            return st2, st2.h
+        new_state, hs = lax.scan(step, state, x.transpose(1, 0, 2))
+        h = hs.transpose(1, 0, 2)
+        if mode != "prefill":
+            new_state = None
+    out = nn.dense(p["proj"], nn.rmsnorm(p["norm"], h))
+    return shard(out, ("batch", "seq", "d_model")), new_state
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int,
+                     dtype=jnp.float32) -> SLSTMState:
+    d = cfg.d_model
+    return SLSTMState(
+        jnp.zeros((batch, d), jnp.float32),
+        jnp.zeros((batch, d), jnp.float32),
+        jnp.zeros((batch, d), dtype),
+        jnp.full((batch, d), -1e30, jnp.float32))

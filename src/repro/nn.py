@@ -1,0 +1,136 @@
+"""Minimal pure-JAX NN substrate: parameter init + functional layers.
+
+No flax/haiku on this box — parameters are plain pytrees (nested dicts of
+jnp arrays), applied by pure functions.  Every layer used anywhere in the
+framework lives here so sharding rules (distributed/sharding.py) can pattern
+-match on parameter tree paths.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _fan_in_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / math.sqrt(max(1, fan_in))
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+def dense_init(key, d_in: int, d_out: int, use_bias: bool = True,
+               dtype=jnp.float32) -> Params:
+    kw, kb = jax.random.split(key)
+    p = {"w": _fan_in_init(kw, (d_in, d_out), dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"emb": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(p: Params, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["emb"], ids, axis=0)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+def mlp_chain_init(key, widths: Sequence[int], use_bias: bool = True,
+                   dtype=jnp.float32) -> Params:
+    """A chain of FC layers (the paper's fusable dense blocks)."""
+    keys = jax.random.split(key, len(widths) - 1)
+    return {f"fc{i}": dense_init(keys[i], widths[i], widths[i + 1],
+                                 use_bias, dtype)
+            for i in range(len(widths) - 1)}
+
+
+def mlp_chain(p: Params, x: jnp.ndarray,
+              act: Callable = jax.nn.relu,
+              final_act: bool = True) -> jnp.ndarray:
+    n = len(p)
+    for i in range(n):
+        x = dense(p[f"fc{i}"], x)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(x.shape))
+               for x in jax.tree_util.tree_leaves(params))
+
+
+def cast_floating(tree, dtype):
+    """Cast floating leaves to dtype (mixed-precision helper)."""
+    def f(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(f, tree)
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def cotangent_cast(x, dtype):
+    """Identity forward; casts the COTANGENT to `dtype` in backward.
+
+    The loss-side f32 ops (logsumexp, softcap) make every upstream
+    cotangent f32 by dtype propagation; inserting this barrier right after
+    the backbone's hidden states keeps the whole backward pass — including
+    every SP/TP collective on activation cotangents — in bf16 (§Perf H2).
+    Parameter gradients still land in f32 via the param-cast transpose.
+    """
+    return x
+
+
+def _cotangent_cast_fwd(x, dtype):
+    return x, None
+
+
+def _cotangent_cast_bwd(dtype, _, g):
+    return (g.astype(dtype),)
+
+
+cotangent_cast.defvjp(_cotangent_cast_fwd, _cotangent_cast_bwd)

@@ -1,0 +1,81 @@
+"""Losses.  `chunked_cross_entropy` never materialises the full (T, V)
+logits tensor: the LM head matmul + logsumexp run per sequence chunk inside
+a rematerialised scan.  At gemma2 scale (256k vocab) this cuts peak logits
+memory by the chunk count (16x default) — a beyond-paper memory
+optimization recorded in EXPERIMENTS.md §Perf."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None):
+    """logits (B, S, V), labels (B, S) -> (mean_loss, n_tokens)."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    return -jnp.sum(ll * mask) / n, n
+
+
+def chunked_cross_entropy(hidden: jnp.ndarray, head_w: jnp.ndarray,
+                          labels: jnp.ndarray,
+                          mask: Optional[jnp.ndarray] = None,
+                          softcap: Optional[float] = None,
+                          n_chunks: int = 16, transpose_head: bool = False):
+    """hidden (B, S, D); head_w (D, V) (or (V, D) with transpose_head for
+    tied embeddings); labels (B, S).
+
+    The per-chunk body is jax.checkpoint'ed, so backward recomputes each
+    chunk's logits instead of keeping them live.
+    """
+    b, s, d = hidden.shape
+    if s % n_chunks != 0:
+        n_chunks = 1
+    c = s // n_chunks
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    mask = mask.astype(jnp.float32)
+
+    h_c = hidden.reshape(b, n_chunks, c, d).transpose(1, 0, 2, 3)
+    l_c = labels.reshape(b, n_chunks, c).transpose(1, 0, 2)
+    m_c = mask.reshape(b, n_chunks, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(h, lbl, m):
+        logits = jnp.einsum("bcd,dv->bcv", h,
+                            head_w.T if transpose_head else head_w)
+        logits = logits.astype(jnp.float32)
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, lbl[..., None], -1)[..., 0]
+        return jnp.sum((lse - picked) * m)
+
+    from repro import costmode
+    if costmode.enabled():       # unrolled for exact cost accounting
+        total = jnp.zeros((), jnp.float32)
+        for i in range(n_chunks):
+            total = total + chunk_loss(h_c[i], l_c[i], m_c[i])
+    else:
+        def step(acc, xs):
+            h, lbl, m = xs
+            return acc + chunk_loss(h, lbl, m), None
+        total, _ = lax.scan(step, jnp.zeros((), jnp.float32),
+                            (h_c, l_c, m_c))
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    return total / n, n
+
+
+def zloss(logits: jnp.ndarray, weight: float = 1e-4):
+    """Router/logit z-loss regulariser (optional)."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    return weight * jnp.mean(lse ** 2)

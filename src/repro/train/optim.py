@@ -1,0 +1,89 @@
+"""AdamW + global-norm clipping + schedules, pure JAX pytree functions.
+
+Optimizer state shardings mirror the parameter shardings (m/v inherit the
+param's PartitionSpec), so FSDP covers optimizer memory too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def init(params) -> OptState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        1.0, cfg.total_steps - cfg.warmup_steps)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * \
+        (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def apply_updates(params, opt_state: OptState, grads, cfg: AdamWConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m2 / b1c
+        vhat = v2 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + \
+            cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state.m)
+    flat_v = treedef.flatten_up_to(opt_state.v)
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, OptState(step, new_m, new_v), metrics

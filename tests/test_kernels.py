@@ -1,0 +1,221 @@
+"""Per-kernel interpret-mode validation: sweep shapes/dtypes, allclose vs
+the pure-jnp oracles (ref.py)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import mapping as M
+from repro.core import sparseconv as SC
+from repro.kernels.spconv import ops as spconv_ops
+from repro.kernels.spconv.ref import spconv_fod_ref
+from repro.kernels.spconv.spconv import spconv_fod_pallas
+from repro.kernels.fused_mlp import ops as fmlp_ops
+from repro.kernels.fused_mlp.ref import fused_mlp_ref
+from repro.kernels.grouped_matmul import ops as gmm_ops
+from repro.kernels.grouped_matmul.grouped_matmul import grouped_matmul_pallas
+from repro.kernels.grouped_matmul.ref import grouped_matmul_ref
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention.ref import attention_ref
+from tests.test_mapping import random_cloud
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# spconv fetch-on-demand
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,m,cin,cout,k", [
+    (64, 64, 8, 16, 27), (128, 64, 32, 8, 8), (256, 128, 16, 32, 27)])
+def test_spconv_kernel_vs_ref(n, m, cin, cout, k, dtype):
+    rng = np.random.default_rng(0)
+    feats = jnp.asarray(rng.normal(size=(n, cin)), dtype)
+    w = jnp.asarray(rng.normal(size=(k, cin, cout)) * 0.2, dtype)
+    inv = rng.integers(-1, n, size=(k, m)).astype(np.int32)
+    out = spconv_fod_pallas(feats, jnp.asarray(inv), w, out_tile=64,
+                            interpret=True)
+    ref = spconv_fod_ref(feats, jnp.asarray(inv), w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_spconv_kernel_cin_tiling():
+    rng = np.random.default_rng(1)
+    feats = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(8, 32, 16)).astype(np.float32))
+    inv = jnp.asarray(rng.integers(-1, 64, size=(8, 64)).astype(np.int32))
+    a = spconv_fod_pallas(feats, inv, w, out_tile=32, cin_tile=8,
+                          interpret=True)
+    b = spconv_fod_ref(feats, inv, w)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_spconv_kernel_end_to_end_matches_flows():
+    """Full pipeline: maps from the Mapping Unit -> pallas kernel == both
+    XLA flows."""
+    rng = np.random.default_rng(2)
+    coords, mask = random_cloud(rng, 90, 128, grid=12)
+    feats = jnp.asarray(rng.normal(size=(128, 16)).astype(np.float32))
+    pc = M.make_point_cloud(jnp.asarray(coords), jnp.asarray(mask))
+    w = jnp.asarray(rng.normal(size=(27, 16, 24)).astype(np.float32))
+    maps, out_pc = M.build_conv_maps(pc, 3, 1)
+    a = spconv_ops.sparse_conv_fod(feats, maps, w, out_pc.capacity)
+    b = SC.fetch_on_demand(feats, maps, w, out_pc.capacity)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused MLP (temporal layer fusion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("widths", [
+    [16, 32, 64], [8, 128, 128, 32], [64, 64]])
+def test_fused_mlp_vs_ref(widths, dtype):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(200, widths[0])), dtype)
+    ws = [jnp.asarray(rng.normal(size=(widths[i], widths[i + 1])) * 0.2,
+                      dtype) for i in range(len(widths) - 1)]
+    bs = [jnp.asarray(rng.normal(size=(widths[i + 1],)) * 0.1, dtype)
+          for i in range(len(widths) - 1)]
+    out = fmlp_ops.fused_mlp(x, ws, bs, tile_points=64)
+    ref = fused_mlp_ref(x, ws, bs)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_fused_mlp_chain_matches_nn_chain():
+    from repro import nn
+    rng = np.random.default_rng(4)
+    p = nn.mlp_chain_init(jax.random.key(0), [12, 48, 48, 24])
+    x = jnp.asarray(rng.normal(size=(100, 12)).astype(np.float32))
+    out = fmlp_ops.fused_mlp_chain(x, p, final_act=False,
+                                   budget_bytes=1 << 20)
+    ref = nn.mlp_chain(p, x, final_act=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul + sorted MoE dispatch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("e,rt,cin,cout", [(4, 32, 16, 64), (8, 64, 64, 32)])
+def test_grouped_matmul_vs_ref(e, rt, cin, cout, dtype):
+    rng = np.random.default_rng(5)
+    n_tiles = 2 * e
+    x = jnp.asarray(rng.normal(size=(n_tiles * rt, cin)), dtype)
+    w = jnp.asarray(rng.normal(size=(e, cin, cout)) * 0.2, dtype)
+    eid = jnp.asarray(rng.integers(0, e, size=(n_tiles,)).astype(np.int32))
+    out = grouped_matmul_pallas(x, eid, w, row_tile=rt, interpret=True)
+    ref = grouped_matmul_ref(x, eid, w, row_tile=rt)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_grouped_matmul_cin_cout_tiling():
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(128, 32)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(4, 32, 64)).astype(np.float32))
+    eid = jnp.asarray(np.array([0, 3, 1, 2], np.int32))
+    from repro.kernels.grouped_matmul.grouped_matmul import \
+        grouped_matmul_pallas as gp
+    a = gp(x, eid, w, row_tile=32, cin_tile=16, cout_tile=32,
+           interpret=True)
+    b = grouped_matmul_ref(x, eid, w, row_tile=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_sorted_moe_ffn_matches_dense_dispatch():
+    """Sorted (PointAcc) dispatch == dense one-hot dispatch when capacity is
+    ample."""
+    rng = np.random.default_rng(7)
+    t, d, f, e, topk = 96, 16, 32, 4, 2
+    x = jnp.asarray(rng.normal(size=(t, d)).astype(np.float32))
+    w_in = jnp.asarray(rng.normal(size=(e, d, f)).astype(np.float32) * 0.2)
+    w_out = jnp.asarray(rng.normal(size=(e, f, d)).astype(np.float32) * 0.2)
+    logits = jnp.asarray(rng.normal(size=(t, e)).astype(np.float32))
+    gates, idx = jax.lax.top_k(jax.nn.softmax(logits, -1), topk)
+
+    got = gmm_ops.sorted_moe_ffn(x, idx, gates, w_in, w_out,
+                                 capacity_factor=8.0, row_tile=32)
+    # dense oracle: every expert on every token, one-hot combine
+    h = jnp.einsum("td,edf->tef", x, w_in)
+    y = jnp.einsum("tef,efd->ted", jax.nn.silu(h), w_out)
+    onehot = jax.nn.one_hot(idx, e) * gates[..., None]        # (t,topk,e)
+    expect = jnp.einsum("tke,ted->td", onehot, y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_dispatch_capacity_drops_overflow():
+    idx = jnp.zeros((64, 1), jnp.int32)          # all tokens -> expert 0
+    disp = gmm_ops.make_dispatch(idx, n_experts=4, capacity=32, row_tile=32)
+    kept = int(jnp.sum(disp.dest_row >= 0))
+    assert kept == 32                             # capacity-clipped
+    # dropped tokens marked -1
+    assert int(jnp.sum(disp.dest_row < 0)) == 32
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, None, None), (True, 64, None), (True, None, 30.0),
+    (False, None, None), (True, 32, 50.0)])
+def test_flash_attention_vs_ref(causal, window, softcap, dtype):
+    rng = np.random.default_rng(8)
+    b, hq, hkv, s, d = 2, 4, 2, 256, 32
+    q = jnp.asarray(rng.normal(size=(b, hq, s, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), dtype)
+    out = fa_ops.flash_attention(q, k, v, causal, window, softcap, 64, True)
+    ref = attention_ref(q, k, v, causal=causal, window=window,
+                        softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 2e-3,
+                               atol=3e-2 if dtype == jnp.bfloat16 else 2e-3)
+
+
+def test_flash_attention_cross_lengths():
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.normal(size=(1, 2, 128, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 2, 384, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 2, 384, 16)).astype(np.float32))
+    out = fa_ops.flash_attention(q, k, v, False, None, None, 64, True)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_flash_attention_grad_matches_ref_grad():
+    rng = np.random.default_rng(10)
+    q = jnp.asarray(rng.normal(size=(1, 2, 64, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 1, 64, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 1, 64, 16)).astype(np.float32))
+
+    def loss_kern(q, k, v):
+        return jnp.sum(fa_ops.flash_attention(q, k, v, True, None, None,
+                                              32, True) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(attention_ref(q, k, v, causal=True) ** 2)
+
+    g1 = jax.grad(loss_kern, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3,
+                                   atol=2e-3)

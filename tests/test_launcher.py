@@ -1,0 +1,64 @@
+"""Launcher-level fault-tolerance: checkpoint/restart continuity and the
+end-to-end train loop."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_train(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train"] + args,
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def parse_losses(stdout):
+    out = {}
+    for line in stdout.splitlines():
+        if line.startswith("step "):
+            parts = line.split()
+            out[int(parts[1])] = float(parts[3])
+    return out
+
+
+def test_train_restart_continuity(tmp_path):
+    """Run 20 steps with checkpoints, then restart: the resumed run must
+    continue from the checkpointed step with the identical data stream and
+    produce the same losses as an uninterrupted 30-step run."""
+    ck1 = str(tmp_path / "a")
+    common_args = ["--arch", "xlstm-125m", "--reduced", "--batch", "4",
+                   "--seq", "32", "--log-every", "1",
+                   "--lr-total-steps", "30"]   # schedule fixed across runs
+    full = run_train(common_args + ["--steps", "30",
+                      "--ckpt-dir", str(tmp_path / "ref"),
+                      "--ckpt-every", "1000"])
+    losses_full = parse_losses(full)
+
+    run_train(common_args + ["--steps", "20", "--ckpt-dir", ck1,
+                             "--ckpt-every", "10"])
+    resumed = run_train(common_args + ["--steps", "30", "--ckpt-dir", ck1,
+                                       "--ckpt-every", "10"])
+    assert "[resume] step 20" in resumed
+    losses_res = parse_losses(resumed)
+    # steps 20.. must match the uninterrupted run closely
+    common = sorted(set(losses_full) & set(losses_res))
+    assert common and min(common) >= 20
+    for s in common:
+        np.testing.assert_allclose(losses_full[s], losses_res[s],
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_train_loss_improves():
+    out = run_train(["--arch", "qwen1.5-4b", "--reduced", "--steps", "40",
+                     "--batch", "8", "--seq", "32", "--lr", "1e-3",
+                     "--log-every", "5"])
+    assert "improved" in out and "NOT improved" not in out

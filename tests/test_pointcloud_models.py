@@ -1,0 +1,90 @@
+"""Smoke tests: every paper network runs a forward pass, correct shapes,
+no NaNs, masked outputs zeroed."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import mapping as M
+from repro.models import pointnets as PN
+from repro.models import minkunet as MU
+from tests.test_mapping import random_cloud
+
+
+@pytest.fixture(scope="module")
+def cloud():
+    rng = np.random.default_rng(0)
+    xyz = rng.normal(size=(2, 96, 3)).astype(np.float32)
+    mask = np.ones((2, 96), bool)
+    mask[1, 80:] = False
+    return jnp.asarray(xyz), jnp.asarray(mask)
+
+
+def _check(x, shape):
+    assert x.shape == shape
+    assert not np.any(np.isnan(np.asarray(x)))
+
+
+def test_pointnet(cloud):
+    xyz, mask = cloud
+    p = PN.pointnet_init(jax.random.key(0), n_classes=40)
+    _check(PN.pointnet_apply(p, xyz, mask), (2, 40))
+
+
+def test_pointnetpp_cls(cloud):
+    xyz, mask = cloud
+    p = PN.pointnetpp_cls_init(jax.random.key(1), n_classes=40)
+    _check(PN.pointnetpp_cls_apply(p, xyz, mask, n1=32, n2=8), (2, 40))
+
+
+def test_pointnetpp_seg(cloud):
+    xyz, mask = cloud
+    p = PN.pointnetpp_seg_init(jax.random.key(2), n_classes=13)
+    out = PN.pointnetpp_seg_apply(p, xyz, mask, n1=32, n2=8)
+    _check(out, (2, 96, 13))
+    assert np.all(np.asarray(out)[1, 80:] == 0)
+
+
+def test_dgcnn(cloud):
+    xyz, mask = cloud
+    p = PN.dgcnn_init(jax.random.key(3), n_classes=16)
+    _check(PN.dgcnn_apply(p, xyz, mask, k=8), (2, 16))
+
+
+def test_fpointnetpp(cloud):
+    xyz, mask = cloud
+    p = PN.fpointnetpp_init(jax.random.key(4))
+    out = PN.fpointnetpp_apply(p, xyz, mask)
+    _check(out["seg"], (2, 96, 2))
+    _check(out["center"], (2, 3))
+    _check(out["box"], (2, 7))
+
+
+@pytest.mark.parametrize("flow", ["fod", "gms"])
+def test_minkunet(flow):
+    rng = np.random.default_rng(5)
+    coords, mask = random_cloud(rng, 120, 160, grid=16)
+    feats = jnp.asarray(rng.normal(size=(160, 4)).astype(np.float32))
+    feats = feats * jnp.asarray(mask)[:, None]
+    pc = M.make_point_cloud(jnp.asarray(coords), jnp.asarray(mask))
+    p = MU.minkunet_init(jax.random.key(6), c_in=4, n_classes=13,
+                         stem=8, enc_planes=(8, 16), dec_planes=(16, 8),
+                         blocks_per_stage=1)
+    out = MU.minkunet_apply(p, pc, feats, flow=flow)
+    assert out.shape == (160, 13)
+    assert not np.any(np.isnan(np.asarray(out)))
+    assert np.all(np.asarray(out)[~mask] == 0)
+
+
+def test_minkunet_flows_identical():
+    rng = np.random.default_rng(7)
+    coords, mask = random_cloud(rng, 60, 96, grid=12)
+    feats = jnp.asarray(rng.normal(size=(96, 4)).astype(np.float32))
+    feats = feats * jnp.asarray(mask)[:, None]
+    pc = M.make_point_cloud(jnp.asarray(coords), jnp.asarray(mask))
+    p = MU.mini_minkunet_init(jax.random.key(8))
+    a = MU.minkunet_apply(p, pc, feats, flow="fod")
+    b = MU.minkunet_apply(p, pc, feats, flow="gms")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,139 @@
+"""Sparse conv flows vs dense lax.conv oracle, and flow cross-equality."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax import lax
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mapping as M
+from repro.core import sparseconv as SC
+from tests.test_mapping import random_cloud
+
+
+def to_dense(coords, mask, feats, grid, batches):
+    c_in = feats.shape[-1]
+    dense = np.zeros((batches, grid, grid, grid, c_in), np.float32)
+    for i in range(coords.shape[0]):
+        if mask[i]:
+            b, x, y, z = coords[i]
+            dense[b, x, y, z] = feats[i]
+    return dense
+
+
+def dense_conv(dense, weights, offsets, stride):
+    """Direct oracle: out[q] = sum_d in[q + d] w_d, evaluated on the grid."""
+    b, gx, gy, gz, cin = dense.shape
+    cout = weights.shape[-1]
+    og = gx // stride
+    out = np.zeros((b, og, og, og, cout), np.float32)
+    for k, d in enumerate(offsets):
+        for qx in range(og):
+            for qy in range(og):
+                for qz in range(og):
+                    p = (qx * stride + d[0], qy * stride + d[1],
+                         qz * stride + d[2])
+                    if all(0 <= p[i] < gx for i in range(3)):
+                        out[:, qx, qy, qz] += dense[:, p[0], p[1], p[2]] \
+                            @ weights[k]
+    return out
+
+
+@pytest.mark.parametrize("flow", ["gms", "fod"])
+@pytest.mark.parametrize("kernel_size,stride", [(3, 1), (2, 2)])
+def test_sparse_conv_vs_dense_oracle(flow, kernel_size, stride):
+    rng = np.random.default_rng(0)
+    grid, batches, cin, cout = 8, 2, 5, 7
+    coords, mask = random_cloud(rng, 40, 64, grid=grid, batches=batches)
+    feats = rng.normal(size=(64, cin)).astype(np.float32)
+    feats[~mask] = 0.0
+    pc = M.make_point_cloud(jnp.asarray(coords), jnp.asarray(mask))
+    k = kernel_size ** 3
+    weights = rng.normal(size=(k, cin, cout)).astype(np.float32) * 0.3
+
+    res = SC.sparse_conv(pc, jnp.asarray(feats), jnp.asarray(weights),
+                         kernel_size, stride, flow=flow)
+
+    dense_in = to_dense(coords, mask, feats, grid, batches)
+    offs = M.kernel_offsets(kernel_size, 3, 1)
+    dense_out = dense_conv(dense_in, weights, offs, stride)
+
+    oc, om = np.asarray(res.pc.coords), np.asarray(res.pc.mask)
+    of = np.asarray(res.features)
+    for i in range(oc.shape[0]):
+        if om[i]:
+            b, x, y, z = oc[i]
+            np.testing.assert_allclose(
+                of[i], dense_out[b, x // stride, y // stride, z // stride],
+                rtol=1e-4, atol=1e-4)
+    # invalid rows must be zero
+    assert np.all(of[~om] == 0)
+
+
+def test_flows_agree():
+    rng = np.random.default_rng(1)
+    coords, mask = random_cloud(rng, 100, 128, grid=12)
+    feats = jnp.asarray(rng.normal(size=(128, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(27, 16, 24)).astype(np.float32))
+    pc = M.make_point_cloud(jnp.asarray(coords), jnp.asarray(mask))
+    a = SC.sparse_conv(pc, feats, w, 3, 1, flow="gms").features
+    b = SC.sparse_conv(pc, feats, w, 3, 1, flow="fod").features
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_transposed_conv_upsamples_onto_cached_cloud():
+    """Down conv then transposed conv: output lives on the original cloud and
+    matches an explicit dense computation of the swapped maps."""
+    rng = np.random.default_rng(2)
+    coords, mask = random_cloud(rng, 30, 48, grid=8)
+    feats = rng.normal(size=(48, 4)).astype(np.float32)
+    feats[~mask] = 0
+    pc = M.make_point_cloud(jnp.asarray(coords), jnp.asarray(mask))
+    w_down = jnp.asarray(rng.normal(size=(8, 4, 6)).astype(np.float32))
+    down = SC.sparse_conv(pc, jnp.asarray(feats), w_down, 2, 2)
+
+    w_up = rng.normal(size=(8, 6, 5)).astype(np.float32)
+    up = SC.sparse_conv_transposed(down.features, down.maps, pc,
+                                   jnp.asarray(w_up))
+    assert up.shape == (48, 5)
+    # oracle via the swapped maps directly
+    sm = down.maps.swap()
+    expect = np.zeros((48, 5), np.float32)
+    din = np.asarray(down.features)
+    for k in range(8):
+        for t in range(sm.in_idx.shape[1]):
+            if sm.valid[k, t]:
+                expect[int(sm.out_idx[k, t])] += din[int(sm.in_idx[k, t])] \
+                    @ w_up[k]
+    np.testing.assert_allclose(np.asarray(up), expect, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50), n=st.integers(10, 50))
+def test_flows_agree_property(seed, n):
+    rng = np.random.default_rng(seed)
+    cap = n + 10
+    coords, mask = random_cloud(rng, n, cap, grid=6)
+    feats = jnp.asarray(rng.normal(size=(cap, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(27, 8, 8)).astype(np.float32))
+    pc = M.make_point_cloud(jnp.asarray(coords), jnp.asarray(mask))
+    a = SC.sparse_conv(pc, feats, w, 3, 1, flow="gms").features
+    b = SC.sparse_conv(pc, feats, w, 3, 1, flow="fod").features
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_fusion_planner_respects_budget_and_covers_chain():
+    from repro.core import fusion as F
+    widths = [64, 256, 256, 512, 512, 128, 13]
+    groups = F.plan_fusion(widths, budget_bytes=2 * 1024 * 1024)
+    covered = sum(g.n_layers for g in groups)
+    assert covered == len(widths) - 1
+    for g in groups:
+        assert g.onchip_bytes <= 2 * 1024 * 1024
+    # fused DRAM traffic must be <= unfused
+    fused = F.dram_bytes_fused(4096, widths, groups)
+    unfused = F.dram_bytes_unfused(4096, widths)
+    assert fused < unfused
