@@ -1,0 +1,57 @@
+"""Version-compatibility shims for jax APIs that moved between releases.
+
+The codebase targets current jax but must run on the pinned runtime image
+(jax 0.4.37).  Import the moved names from here instead of guessing.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.experimental.pallas.tpu as pltpu
+
+# Pallas TPU compiler params: TPUCompilerParams (<= 0.4.x) was renamed to
+# CompilerParams in newer releases.
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+
+# shard_map graduated from jax.experimental.shard_map to jax.shard_map, and
+# renamed kwargs along the way: axis_names (manual axes) replaced `auto` (its
+# complement), check_vma replaced check_rep.
+# lax.pcast(..., to="varying") feeds the VMA type system of new shard_map;
+# older releases spell it lax.pvary or (0.4.x) have no VMA tracking at all,
+# where marking is a no-op.
+if hasattr(jax.lax, "pcast"):
+    pcast_varying = lambda x, axes: jax.lax.pcast(x, axes, to="varying")
+elif hasattr(jax.lax, "pvary"):
+    pcast_varying = jax.lax.pvary
+else:
+    pcast_varying = lambda x, axes: x
+
+
+# lax.axis_size(name) is newer API; psum of a literal 1 is the classic
+# spelling and constant-folds to the same static size.
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+    def axis_size(axis_name):
+        return jax.lax.psum(1, axis_name)
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=None, **kwargs):
+        # axis_names (partial-manual) would map onto old shard_map's `auto`
+        # complement, but 0.4.x lowers that through PartitionId, which the
+        # CPU SPMD partitioner rejects.  Treating every axis as manual is
+        # equivalent here: specs leave the non-manual axes unmentioned, so
+        # those inputs are replicated and the body computes identically
+        # across them.  The old replication checker can't see that, so it
+        # stays off (it's a static check only).
+        del axis_names, check_vma
+        kwargs.setdefault("check_rep", False)
+        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kwargs)

@@ -25,6 +25,18 @@ validity masks; invalid slots hold SENTINEL coordinates which sort to the end.
 Coordinate convention: `coords` is (N, 1+D) int32 with the batch index in
 column 0 and D spatial dims after it.  `stride` (the paper's tensor stride
 `ts`) is a static python int and always a power of two.
+
+Two ranking engines coexist:
+
+  * v1 ("lex"): one full lexicographic merge-sort of both clouds per kernel
+    offset (the original, any spatial dimensionality).
+  * v2 ("packed", default for D=3): bit-pack each coordinate into one 62-bit
+    key (repro.core.packed), sort every cloud ONCE into a `SortedCloud`
+    cache, and realise each kernel offset as a vectorised binary search of
+    the shifted output keys against the sorted input keys — K merge-sorts
+    collapse to 1 sort + K searches, and the sorted cloud is reused by every
+    mapping op at the same stride (all submanifold convs of a network level
+    share one sort; `downsample_sorted` dedups the already-packed keys).
 """
 
 from __future__ import annotations
@@ -37,8 +49,15 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core import packed as PK
+
 # Large-but-safe sentinel: room to add kernel offsets without int32 overflow.
-SENTINEL = np.int32(2**30 - 1)
+SENTINEL = PK.COORD_SENTINEL
+
+# Engine used when callers don't pass one explicitly.  "v2" is the packed-key
+# engine; "v1" is the per-offset lexicographic merge-sort kept for
+# cross-checking and for spatial dimensionalities != 3.
+DEFAULT_ENGINE = "v2"
 
 
 class PointCloud(NamedTuple):
@@ -65,12 +84,20 @@ class KernelMaps(NamedTuple):
 
     For each kernel offset k (the weight index w_n), row k lists the matched
     (input index, output index) pairs, padded with -1 / valid=False.
+
+    `inv` is the inverse table inv[k, j] = input index feeding output j under
+    offset k (-1 if none).  The v2 engine emits it for free — its binary
+    search is indexed by output row, so the hit positions ARE the inverse
+    table — letting the Pallas FoD kernel skip the scatter pass that v1
+    needed (kernels/spconv/ops.invert_maps).  None on the v1 path and after
+    swap().
     """
 
     in_idx: jnp.ndarray   # (K, cap) int32, -1 padded
     out_idx: jnp.ndarray  # (K, cap) int32, -1 padded
     valid: jnp.ndarray    # (K, cap) bool
     offsets: np.ndarray   # (K, D) static numpy offsets (units of input stride)
+    inv: jnp.ndarray | None = None  # (K, out_cap) int32, -1 = no map
 
     def swap(self) -> "KernelMaps":
         """Transpose the maps: used for transposed (up-sampling) convolution.
@@ -253,18 +280,185 @@ def kernel_map(in_pc: PointCloud, out_pc: PointCloud, kernel_size: int,
 
 
 # ---------------------------------------------------------------------------
+# v2 packed-key engine: one sort per cloud, binary search per offset
+# ---------------------------------------------------------------------------
+
+class SortedCloud(NamedTuple):
+    """A point cloud plus its once-computed packed-key ranking structure.
+
+    This is the cache the v2 engine threads through a network: every mapping
+    op against the same cloud (27 submanifold offsets, the stride-2 down
+    conv, coordinate dedup) reuses the single sort instead of re-ranking.
+
+    sorted_hi/sorted_lo are the packed key words in ascending (logical
+    62-bit) key order with sentinels (invalid rows) at the end; perm maps
+    sorted position -> original row: sorted = keys[perm].
+    """
+
+    pc: PointCloud
+    sorted_hi: jnp.ndarray  # (N,) int32
+    sorted_lo: jnp.ndarray  # (N,) uint32
+    perm: jnp.ndarray       # (N,) int32
+
+
+def sort_cloud(pc: PointCloud) -> SortedCloud:
+    """Rank a cloud once: pack coords to 62-bit keys and sort them.
+
+    The ONLY `lax.sort` the v2 engine runs for a given cloud — every
+    kernel-offset lookup afterwards is a binary search.
+    """
+    if pc.ndim_spatial != 3:
+        raise ValueError("packed-key engine requires 3 spatial dims, got "
+                         f"{pc.ndim_spatial}; use engine='v1'")
+    hi, lo = PK.pack_coords(pc.coords, pc.mask)
+    if not isinstance(hi, jax.core.Tracer):
+        # Eager call: fail loudly on valid points outside the key budget
+        # instead of silently dropping them from every map.  (Under jit the
+        # data is unavailable; the saturate-to-sentinel semantics — and the
+        # v1 escape hatch — are documented in README.)
+        n_bad = int(jnp.sum(PK.is_sentinel_key(hi) & pc.mask))
+        if n_bad:
+            raise ValueError(
+                f"{n_bad} valid point(s) outside the packed-key budget "
+                f"(batch 0..{PK.BATCH_MAX}, coords {PK.COORD_MIN}.."
+                f"{PK.COORD_MAX}); use engine='v1' for such clouds")
+    iota = jnp.arange(pc.capacity, dtype=jnp.int32)
+    s_hi, s_lo, perm = lax.sort((hi, lo, iota), dimension=0, num_keys=2,
+                                is_stable=True)
+    return SortedCloud(pc, s_hi, s_lo, perm)
+
+
+def downsample_sorted(sc: SortedCloud, factor: int = 2) -> SortedCloud:
+    """Output cloud construction reusing the packed keys: quantize in the
+    key domain, one single-key sort, adjacent dedup, then compact with a
+    cumsum scatter instead of v1's second sorting pass.
+
+    The result is bit-identical to `downsample` (same coords/mask order —
+    packed-key order IS lexicographic coordinate order) and arrives already
+    sorted, so the next level's SortedCloud costs nothing extra.
+    """
+    new_stride = sc.pc.stride * factor
+    qhi, qlo = PK.quantize_keys(sc.sorted_hi, sc.sorted_lo, new_stride)
+    s_hi, s_lo = lax.sort((qhi, qlo), dimension=0, num_keys=2,
+                          is_stable=True)
+    prev_hi = jnp.roll(s_hi, 1)
+    prev_lo = jnp.roll(s_lo, 1)
+    is_first = (s_hi != prev_hi) | (s_lo != prev_lo)
+    is_first = is_first.at[0].set(True)
+    valid = is_first & ~PK.is_sentinel_key(s_hi)
+
+    n = s_hi.shape[0]
+    dest = jnp.where(valid, jnp.cumsum(valid.astype(jnp.int32)) - 1, n)
+    c_hi = jnp.full(n, PK.KEY_HI_SENTINEL, jnp.int32) \
+        .at[dest].set(s_hi, mode="drop")
+    c_lo = jnp.full(n, PK.KEY_LO_SENTINEL, jnp.uint32) \
+        .at[dest].set(s_lo, mode="drop")
+    mask = jnp.zeros(n, bool).at[dest].set(True, mode="drop")
+    pc = PointCloud(PK.unpack_keys(c_hi, c_lo), mask, new_stride)
+    # compacted keys are already ascending: the sorted view is the identity
+    return SortedCloud(pc, c_hi, c_lo, jnp.arange(n, dtype=jnp.int32))
+
+
+def kernel_map_v2(in_sc: SortedCloud, out_pc: PointCloud, kernel_size: int,
+                  cap: int | None = None) -> KernelMaps:
+    """Packed-key kernel mapping: for output q and offset delta, the paired
+    input is p = q + delta — found by binary-searching key(q + delta) in the
+    input cloud's sorted keys.  One vectorised search per offset replaces
+    v1's full merge-sort per offset, and because the search is indexed by
+    output row the hit table IS the inverse table the Pallas FoD kernel
+    wants (KernelMaps.inv) — no scatter pass.
+    """
+    offs = kernel_offsets(kernel_size, 3, in_sc.pc.stride)
+    m = out_pc.capacity
+    n = in_sc.pc.capacity
+    cap = cap if cap is not None else min(n, m)
+
+    # queries: (K, m, 4) shifted output coords (batch col untouched)
+    q_spatial = out_pc.coords[None, :, 1:] + jnp.asarray(offs)[:, None, :]
+    q_batch = jnp.broadcast_to(out_pc.coords[None, :, :1],
+                               (offs.shape[0], m, 1))
+    q_hi, q_lo = PK.pack_coords(jnp.concatenate([q_batch, q_spatial], -1),
+                                out_pc.mask[None, :])
+
+    pos = PK.searchsorted_pair(in_sc.sorted_hi, in_sc.sorted_lo, q_hi, q_lo)
+    posc = jnp.clip(pos, 0, n - 1)
+    hit = ((in_sc.sorted_hi[posc] == q_hi) & (in_sc.sorted_lo[posc] == q_lo)
+           & ~PK.is_sentinel_key(q_hi))
+
+    in_idx = jnp.where(hit, in_sc.perm[posc], jnp.int32(-1))
+    out_idx = jnp.where(
+        hit, jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32), hit.shape),
+        jnp.int32(-1))
+    # (K, m): inv[k, j] = i.  Only valid while the maps carry every match —
+    # a cap below m may truncate matches, and an inv that still held them
+    # would make the pallas flow disagree with gms/fod.
+    inv = in_idx if cap >= m else None
+
+    if cap < m:
+        # explicit small cap: compact matches to the front (one cheap
+        # single-key row sort — only reachable via user-supplied cap)
+        order = (~hit).astype(jnp.int32)
+        _, in_idx, out_idx, hit = lax.sort((order, in_idx, out_idx, hit),
+                                           dimension=1, num_keys=1,
+                                           is_stable=True)
+    if cap != m:
+        in_idx = _fit_cols(in_idx, cap, -1)
+        out_idx = _fit_cols(out_idx, cap, -1)
+        hit = _fit_cols(hit, cap, False)
+    return KernelMaps(in_idx, out_idx, hit, offs, inv=inv)
+
+
+def _fit_cols(a: jnp.ndarray, cap: int, fill) -> jnp.ndarray:
+    if cap <= a.shape[1]:
+        return a[:, :cap]
+    pad = jnp.full((a.shape[0], cap - a.shape[1]), fill, a.dtype)
+    return jnp.concatenate([a, pad], axis=1)
+
+
+def build_conv_maps_cached(sc: SortedCloud, kernel_size: int, stride: int,
+                           cap: int | None = None):
+    """v2 `build_conv_maps` against an existing SortedCloud cache.
+
+    Returns (maps, out_sorted_cloud) so callers building a whole network can
+    chain the cache level-to-level (minkunet.build_unet_maps does).
+    """
+    out_sc = sc if stride == 1 else downsample_sorted(sc, stride)
+    maps = kernel_map_v2(sc, out_sc.pc, kernel_size, cap=cap)
+    return maps, out_sc
+
+
+# ---------------------------------------------------------------------------
 # Stride-aware convenience wrappers used by the SparseConv layer
 # ---------------------------------------------------------------------------
 
 def build_conv_maps(in_pc: PointCloud, kernel_size: int, stride: int,
-                    cap: int | None = None):
+                    cap: int | None = None, engine: str | None = None,
+                    cache: SortedCloud | None = None):
     """Maps + output cloud for a (possibly strided) sparse convolution.
 
     stride == 1  -> submanifold conv: output sites == input sites (the
                     paper's no-dilation invariant: nonzeros never dilate).
     stride == 2  -> output cloud from quantization + unique, offsets in units
                     of the *input* stride.
+
+    engine: "v2" (packed keys, default) or "v1" (per-offset lexicographic
+    merge-sort; required for ndim_spatial != 3, kept selectable for
+    cross-checking).  `cache` short-circuits the v2 sort with an existing
+    SortedCloud of `in_pc`.  The default engine falls back to v1 for
+    non-3D clouds; an *explicit* engine="v2" raises there instead (a
+    silent downgrade would defeat cross-checking).
     """
+    requested = engine
+    engine = engine or DEFAULT_ENGINE
+    if engine == "v2" and in_pc.ndim_spatial != 3 and requested is None:
+        engine = "v1"
+    if engine == "v2":
+        sc = cache if cache is not None else sort_cloud(in_pc)
+        maps, out_sc = build_conv_maps_cached(sc, kernel_size, stride,
+                                              cap=cap)
+        return maps, out_sc.pc
+    if engine != "v1":
+        raise ValueError(f"unknown mapping engine {engine!r}")
     if stride == 1:
         out_pc = in_pc
     else:

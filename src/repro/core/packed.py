@@ -1,0 +1,146 @@
+"""Packed coordinate keys: the v2 ranking engine's scalar key domain.
+
+PointAcc's Mapping Unit (paper §4.1) ranks *coordinates*; the v1 software
+realisation sorted 4-6 parallel int32 columns lexicographically for every
+kernel offset.  This module collapses a (batch, x, y, z) coordinate into one
+62-bit packed key so each ranking op touches a single logical scalar:
+
+    bit 61..48   batch  (14 bits, unsigned,  0 .. 16383)
+    bit 47..32   x+2^15 (16 bits, biased,   -32768 .. 32767)
+    bit 31..16   y+2^15 (16 bits, biased)
+    bit 15..0    z+2^15 (16 bits, biased)
+
+The key is stored as an (int32 hi, uint32 lo) word pair — hi carries
+(batch | x), lo carries (y | z) — because int64 is a second-class citizen in
+32-bit-default JAX and on TPU, where XLA would emulate it as an i32 pair
+anyway.  Lexicographic (hi, lo) order over the pair IS ascending order of the
+logical 62-bit key, which in turn IS the lexicographic (batch, x, y, z) order
+the v1 engine used: the per-axis bias is monotone, so every downstream
+structure (sorted clouds, deduped output clouds) is bit-identical to v1's.
+
+Invalid/overflowing coordinates saturate to the sentinel key
+(KEY_HI_SENTINEL is unreachable by any in-range coordinate: the max valid hi
+is (16383<<16)|65535 = 2^30-1 < 2^31-1), so an out-of-budget coordinate can
+never alias a valid key — it sorts to the end and fails every equality test.
+
+Quantization (paper §2.1.1, "clearing the lowest log2(ts) bits") works
+directly in the key domain: the bias 2^15 is divisible by every power-of-two
+stride <= 2^15, so clearing the low log2(ts) bits of each 16-bit field is
+exactly quantize-then-pack.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from jax import lax
+
+# Coordinate-domain sentinel (shared with repro.core.mapping.SENTINEL).
+COORD_SENTINEL = np.int32(2**30 - 1)
+
+BATCH_BITS = 14
+SPATIAL_BITS = 16
+BIAS = 1 << (SPATIAL_BITS - 1)              # 32768
+COORD_MIN = -BIAS                           # -32768
+COORD_MAX = BIAS - 1                        # 32767
+BATCH_MAX = (1 << BATCH_BITS) - 1           # 16383
+
+KEY_HI_SENTINEL = np.int32(2**31 - 1)
+KEY_LO_SENTINEL = np.uint32(2**32 - 1)
+
+_LO16 = np.uint32(0xFFFF)
+
+
+def pack_coords(coords: jnp.ndarray, mask: jnp.ndarray | None = None):
+    """(..., 4) int32 coords -> (hi int32, lo uint32) packed key words.
+
+    Rows that are masked out, or whose batch/coordinate falls outside the
+    per-field bit budget, saturate to the sentinel key — never to an aliased
+    valid key.
+    """
+    b = coords[..., 0]
+    x = coords[..., 1]
+    y = coords[..., 2]
+    z = coords[..., 3]
+    ok = (b >= 0) & (b <= BATCH_MAX)
+    for c in (x, y, z):
+        ok = ok & (c >= COORD_MIN) & (c <= COORD_MAX)
+    if mask is not None:
+        ok = ok & mask
+    # Out-of-range lanes may wrap below; `ok` discards them.
+    hi = (b << SPATIAL_BITS) | (x + BIAS)
+    lo = ((y + BIAS).astype(jnp.uint32) << SPATIAL_BITS) \
+        | (z + BIAS).astype(jnp.uint32)
+    hi = jnp.where(ok, hi, KEY_HI_SENTINEL)
+    lo = jnp.where(ok, lo, KEY_LO_SENTINEL)
+    return hi, lo
+
+
+def is_sentinel_key(hi: jnp.ndarray) -> jnp.ndarray:
+    """Valid keys have hi <= 2^30-1, so the hi word alone identifies them."""
+    return hi == KEY_HI_SENTINEL
+
+
+def unpack_keys(hi: jnp.ndarray, lo: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of pack_coords: (hi, lo) -> (..., 4) int32 coords.
+
+    Sentinel keys unpack to all-COORD_SENTINEL rows (the masked-row
+    convention of repro.core.mapping).
+    """
+    valid = ~is_sentinel_key(hi)
+    b = hi >> SPATIAL_BITS
+    x = (hi & np.int32(0xFFFF)) - BIAS
+    y = (lo >> SPATIAL_BITS).astype(jnp.int32) - BIAS
+    z = (lo & _LO16).astype(jnp.int32) - BIAS
+    coords = jnp.stack([b, x, y, z], axis=-1)
+    return jnp.where(valid[..., None], coords, COORD_SENTINEL)
+
+
+def quantize_keys(hi: jnp.ndarray, lo: jnp.ndarray, stride: int):
+    """Clear the low log2(stride) bits of every spatial field, in place in
+    the key domain.  Sentinel keys are preserved (clearing their bits would
+    fabricate a valid-looking key)."""
+    if stride == 1:
+        return hi, lo
+    k = int(np.log2(stride))
+    if 2 ** k != stride:
+        raise ValueError(f"stride must be a power of two, got {stride}")
+    if k > SPATIAL_BITS - 1:
+        raise ValueError(f"stride {stride} exceeds the per-axis bit budget")
+    low = stride - 1
+    qhi = hi & np.int32(~low)
+    qlo = lo & np.uint32(~((low << SPATIAL_BITS) | low) & 0xFFFFFFFF)
+    sent = is_sentinel_key(hi)
+    return (jnp.where(sent, KEY_HI_SENTINEL, qhi),
+            jnp.where(sent, KEY_LO_SENTINEL, qlo))
+
+
+def searchsorted_pair(s_hi: jnp.ndarray, s_lo: jnp.ndarray,
+                      q_hi: jnp.ndarray, q_lo: jnp.ndarray) -> jnp.ndarray:
+    """side='left' binary search of query keys in an ascending key array.
+
+    The sorted operands are the (hi, lo) words of a key array ordered by
+    lexicographic (hi signed, lo unsigned) comparison — i.e. by the logical
+    62-bit key.  Queries may have any shape; returns int32 positions in
+    [0, n].  This is the paper's log-depth comparison network: ceil(log2 n)
+    rounds of vectorised gather + compare, no data movement.
+    """
+    n = s_hi.shape[0]
+    lo_i = jnp.zeros(q_hi.shape, jnp.int32)
+    hi_i = jnp.full(q_hi.shape, n, jnp.int32)
+
+    def step(_, carry):
+        lo_i, hi_i = carry
+        active = lo_i < hi_i
+        mid = (lo_i + hi_i) >> 1
+        midc = jnp.clip(mid, 0, n - 1)
+        m_hi = s_hi[midc]
+        m_lo = s_lo[midc]
+        less = (m_hi < q_hi) | ((m_hi == q_hi) & (m_lo < q_lo))
+        lo_i = jnp.where(active & less, mid + 1, lo_i)
+        hi_i = jnp.where(active & ~less, mid, hi_i)
+        return lo_i, hi_i
+
+    n_steps = max(1, int(np.ceil(np.log2(n + 1))) + 1)
+    lo_i, _ = lax.fori_loop(0, n_steps, step, (lo_i, hi_i))
+    return lo_i

@@ -34,7 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.mapping import KernelMaps, PointCloud, build_conv_maps
+from repro.core.mapping import (KernelMaps, PointCloud, SortedCloud,
+                                build_conv_maps)
 
 
 def gather_matmul_scatter(features: jnp.ndarray, maps: KernelMaps,
@@ -101,9 +102,16 @@ class SparseConvResult(NamedTuple):
 
 def sparse_conv(pc: PointCloud, features: jnp.ndarray, weights: jnp.ndarray,
                 kernel_size: int, stride: int = 1, flow: str = "fod",
-                cap: int | None = None) -> SparseConvResult:
-    """Full sparse conv layer: mapping (MPU) + streaming GEMM (MMU+MXU)."""
-    maps, out_pc = build_conv_maps(pc, kernel_size, stride, cap=cap)
+                cap: int | None = None, engine: str | None = None,
+                cache: SortedCloud | None = None) -> SparseConvResult:
+    """Full sparse conv layer: mapping (MPU) + streaming GEMM (MMU+MXU).
+
+    `cache` is an optional pre-sorted cloud of `pc` (v2 engine): layers that
+    share a stride level pass the same SortedCloud so the ranking sort runs
+    once per level, not once per layer.
+    """
+    maps, out_pc = build_conv_maps(pc, kernel_size, stride, cap=cap,
+                                   engine=engine, cache=cache)
     out = sparse_conv_apply(features, maps, weights, out_pc.capacity, flow)
     out = out * out_pc.mask[:, None]
     return SparseConvResult(out, out_pc, maps)

@@ -23,6 +23,8 @@ import functools
 from typing import Callable
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
@@ -40,7 +42,7 @@ def pipeline_apply(body_fn: Callable, stage_params, x, n_micro: int,
     Returns (n_micro, micro_batch, seq, d) output from the LAST stage
     (other stages return zeros — caller selects).
     """
-    n_stages = lax.axis_size(axis_name)
+    n_stages = compat.axis_size(axis_name)
     stage = lax.axis_index(axis_name)
     n_ticks = n_micro + n_stages - 1
     mb_shape = x.shape[1:]
@@ -73,9 +75,9 @@ def pipeline_apply(body_fn: Callable, stage_params, x, n_micro: int,
 
     # carries vary across pipeline stages: mark them pod-varying for the
     # vma (varying-manual-axes) type system
-    inbuf0 = lax.pcast(jnp.zeros(mb_shape, x.dtype), (axis_name,),
-                       to="varying")
-    outputs0 = lax.pcast(jnp.zeros_like(x), (axis_name,), to="varying")
+    inbuf0 = compat.pcast_varying(jnp.zeros(mb_shape, x.dtype),
+                                  (axis_name,))
+    outputs0 = compat.pcast_varying(jnp.zeros_like(x), (axis_name,))
     (_, outputs), _ = lax.scan(tick, (inbuf0, outputs0),
                                jnp.arange(n_ticks))
     # broadcast the last stage's outputs to every stage (masked psum: only
@@ -116,7 +118,7 @@ def pipelined_forward(body_fn, params_layers, x, mesh, n_micro: int = 4):
         return out.reshape(xb.shape)
 
     stage_spec = jax.tree_util.tree_map(lambda _: P("pod"), staged)
-    return jax.shard_map(
+    return compat.shard_map(
         local, mesh=mesh, axis_names={"pod"},
         in_specs=(stage_spec, P()),
         out_specs=P(),

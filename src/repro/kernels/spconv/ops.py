@@ -15,9 +15,14 @@ from repro.kernels.spconv.ref import spconv_fod_ref
 def invert_maps(maps: KernelMaps, out_cap: int) -> jnp.ndarray:
     """(K, cap) map lists -> (K, out_cap) inverse table inv[k, j] = i.
 
-    Kernel mapping is 1:1 per offset (both clouds are coordinate sets), so
-    the scatter is collision-free.
+    The v2 packed-key engine emits the inverse table directly from its
+    binary-search hit positions (KernelMaps.inv) — that path is a no-op
+    here.  v1 maps (and swapped maps, whose inv is dropped) fall back to
+    the scatter: kernel mapping is 1:1 per offset (both clouds are
+    coordinate sets), so the scatter is collision-free.
     """
+    if maps.inv is not None and maps.inv.shape[1] == out_cap:
+        return maps.inv
     k, cap = maps.in_idx.shape
     inv = jnp.full((k, out_cap), -1, jnp.int32)
     oidx = jnp.where(maps.valid, maps.out_idx, out_cap)      # OOB -> dropped
@@ -33,20 +38,30 @@ def _round_up(x: int, m: int) -> int:
 
 @functools.partial(jax.jit,
                    static_argnames=("out_cap", "out_tile", "interpret"))
-def sparse_conv_fod(features: jnp.ndarray, maps: KernelMaps,
-                    weights: jnp.ndarray, out_cap: int,
-                    out_tile: int = 128,
-                    interpret: bool = True) -> jnp.ndarray:
-    """Drop-in replacement for core.sparseconv flows (flow='pallas').
-
-    interpret=True is the CPU-validation default; on real TPU pass False.
-    """
+def _sparse_conv_fod(features: jnp.ndarray, maps: KernelMaps,
+                     weights: jnp.ndarray, out_cap: int,
+                     out_tile: int, interpret: bool) -> jnp.ndarray:
     inv = invert_maps(maps, out_cap)
     m_pad = _round_up(out_cap, out_tile)
     inv = jnp.pad(inv, ((0, 0), (0, m_pad - out_cap)), constant_values=-1)
     out = spconv_fod_pallas(features, inv, weights, out_tile=out_tile,
                             interpret=interpret)
     return out[:out_cap]
+
+
+def sparse_conv_fod(features: jnp.ndarray, maps: KernelMaps,
+                    weights: jnp.ndarray, out_cap: int,
+                    out_tile: int = 128,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """Drop-in replacement for core.sparseconv flows (flow='pallas').
+
+    interpret=None auto-selects from the active backend: compiled on TPU,
+    interpreter everywhere else (CPU validation).  Pass a bool to override.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _sparse_conv_fod(features, maps, weights, out_cap, out_tile,
+                            interpret)
 
 
 def sparse_conv_fod_ref(features, maps, weights, out_cap):

@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro import compat
+
 
 def _kernel(inv_ref, feat_ref, w_ref, out_ref, acc_ref, *, n_k, n_cin):
     ci = pl.program_id(1)
@@ -83,7 +85,7 @@ def spconv_fod_pallas(features: jnp.ndarray, inv_idx: jnp.ndarray,
         out_specs=pl.BlockSpec((out_tile, cout), lambda o, ci, kk: (o, 0)),
         out_shape=jax.ShapeDtypeStruct((m, cout), features.dtype),
         scratch_shapes=[pltpu.VMEM((out_tile, cout), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
         name="spconv_fetch_on_demand",

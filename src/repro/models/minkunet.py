@@ -90,20 +90,42 @@ def minkunet_init(key, c_in: int = 4, n_classes: int = 13,
     return params
 
 
-def build_unet_maps(pc: M.PointCloud, n_stages: int):
+def build_unet_maps(pc: M.PointCloud, n_stages: int,
+                    engine: str | None = None):
     """Mapping-Unit pass: clouds + kernel maps for every resolution level.
 
     Returns per-level dicts with the submanifold (k=3) maps, the stride-2
     down maps into the next level, and the level's point cloud.  Decoder
     reuses `down` swapped.
+
+    With the packed-key engine (default) each level's cloud is ranked
+    exactly ONCE: the level's SortedCloud serves its 27 submanifold offsets
+    AND the 8 down-conv offsets, and `downsample_sorted` hands the next
+    level its cloud already sorted — one `lax.sort` per stride level for the
+    entire network, every conv afterwards is binary search.
     """
+    resolved = engine or M.DEFAULT_ENGINE
     levels = []
+    if resolved == "v2" and pc.ndim_spatial == 3:
+        sc = M.sort_cloud(pc)
+        for i in range(n_stages + 1):
+            subm, _ = M.build_conv_maps_cached(sc, kernel_size=3, stride=1)
+            level = {"pc": sc.pc, "cloud": sc, "subm": subm}
+            if i < n_stages:
+                down, nxt = M.build_conv_maps_cached(sc, kernel_size=2,
+                                                     stride=2)
+                level["down"] = down
+                sc = nxt
+            levels.append(level)
+        return levels
     cur = pc
     for i in range(n_stages + 1):
-        subm, _ = M.build_conv_maps(cur, kernel_size=3, stride=1)
+        subm, _ = M.build_conv_maps(cur, kernel_size=3, stride=1,
+                                    engine=engine)
         level = {"pc": cur, "subm": subm}
         if i < n_stages:
-            down, nxt = M.build_conv_maps(cur, kernel_size=2, stride=2)
+            down, nxt = M.build_conv_maps(cur, kernel_size=2, stride=2,
+                                          engine=engine)
             level["down"] = down
             cur = nxt
         levels.append(level)

@@ -139,6 +139,7 @@ def test_compressed_psum_error_feedback():
     run_sub("""
         import jax, numpy as np, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
+        from repro import compat
         from repro.distributed import compression as C
         from repro.launch.mesh import make_debug_mesh
 
@@ -149,9 +150,9 @@ def test_compressed_psum_error_feedback():
             def local(xl, e):
                 m, e2 = C.compressed_psum(xl[0], "pod", e[0])
                 return m[None], e2[None]
-            return jax.shard_map(local, mesh=mesh, axis_names={"pod"},
-                                 in_specs=(P("pod"), P("pod")),
-                                 out_specs=(P("pod"), P("pod")))(x, err)
+            return compat.shard_map(local, mesh=mesh, axis_names={"pod"},
+                                    in_specs=(P("pod"), P("pod")),
+                                    out_specs=(P("pod"), P("pod")))(x, err)
 
         shape = (2, 1, 300)                  # (pod, local_rows, dim)
         err = jnp.zeros(shape, jnp.float32)

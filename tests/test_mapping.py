@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from tests.hypothesis_compat import given, settings, st
 
 from repro.core import mapping as M
 from repro.core import pointops as P
@@ -156,6 +156,125 @@ def test_kernel_map_property(n, grid, seed):
                                np.asarray(out_pc.mask), maps.offsets)
     got = maps_to_sets(maps)
     assert all(g == e for g, e in zip(got, expect))
+
+
+# ---------------------------------------------------------------------------
+# v2 packed-key engine vs v1 lexicographic engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel_size,stride", [(3, 1), (2, 2), (3, 2)])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_engines_agree(kernel_size, stride, seed):
+    """v2 kernel_map must equal v1 up to per-offset ordering, and produce
+    bit-identical output clouds, on randomized (shuffled, masked) clouds."""
+    rng = np.random.default_rng(100 + seed)
+    n = int(rng.integers(20, 90))
+    coords, mask = random_cloud(rng, n, n + int(rng.integers(0, 16)),
+                                grid=int(rng.integers(4, 14)))
+    if seed % 2:
+        coords[mask.nonzero()[0], 1:] -= 17          # negative coords too
+    pc = M.make_point_cloud(jnp.asarray(coords), jnp.asarray(mask))
+    m1, o1 = M.build_conv_maps(pc, kernel_size, stride, engine="v1")
+    m2, o2 = M.build_conv_maps(pc, kernel_size, stride, engine="v2")
+    np.testing.assert_array_equal(np.asarray(o1.coords),
+                                  np.asarray(o2.coords))
+    np.testing.assert_array_equal(np.asarray(o1.mask), np.asarray(o2.mask))
+    assert o1.stride == o2.stride
+    for k, (s1, s2) in enumerate(zip(maps_to_sets(m1), maps_to_sets(m2))):
+        assert s1 == s2, f"offset {m1.offsets[k]}: {s1 ^ s2}"
+
+
+def test_v2_inverse_table_matches_v1_scatter():
+    """The v2 engine's free inverse table == scatter-inverting the v1 maps."""
+    from repro.kernels.spconv import ops as spconv_ops
+    rng = np.random.default_rng(11)
+    coords, mask = random_cloud(rng, 70, 96, grid=10)
+    pc = M.make_point_cloud(jnp.asarray(coords), jnp.asarray(mask))
+    for ks, stride in [(3, 1), (2, 2)]:
+        m1, o1 = M.build_conv_maps(pc, ks, stride, engine="v1")
+        m2, _ = M.build_conv_maps(pc, ks, stride, engine="v2")
+        assert m2.inv is not None
+        np.testing.assert_array_equal(
+            np.asarray(spconv_ops.invert_maps(m1, o1.capacity)),
+            np.asarray(m2.inv))
+        # swapped maps drop inv and fall back to the scatter path
+        assert m2.swap().inv is None
+
+
+def test_downsample_sorted_matches_downsample():
+    rng = np.random.default_rng(12)
+    coords, mask = random_cloud(rng, 60, 80, grid=8)
+    pc = M.make_point_cloud(jnp.asarray(coords), jnp.asarray(mask))
+    ref = M.downsample(pc, 2)
+    got = M.downsample_sorted(M.sort_cloud(pc), 2)
+    np.testing.assert_array_equal(np.asarray(ref.coords),
+                                  np.asarray(got.pc.coords))
+    np.testing.assert_array_equal(np.asarray(ref.mask),
+                                  np.asarray(got.pc.mask))
+    assert got.pc.stride == ref.stride
+    # the downsampled SortedCloud is identity-permuted (already sorted)
+    np.testing.assert_array_equal(np.asarray(got.perm), np.arange(80))
+
+
+def test_kernel_map_v2_explicit_small_cap_compacts():
+    rng = np.random.default_rng(13)
+    coords, mask = random_cloud(rng, 40, 64, grid=6)
+    pc = M.make_point_cloud(jnp.asarray(coords), jnp.asarray(mask))
+    full, _ = M.build_conv_maps(pc, 3, 1, engine="v2")
+    small, _ = M.build_conv_maps(pc, 3, 1, cap=50, engine="v2")
+    assert small.in_idx.shape == (27, 50)
+    for sf, ss in zip(maps_to_sets(full), maps_to_sets(small)):
+        assert ss <= sf
+        # nothing lost when matches fit in cap (40 valid points max)
+        assert len(ss) == len(sf)
+
+
+def test_kernel_map_v2_small_cap_drops_inv():
+    """A cap below out-capacity may truncate matches; the inverse table
+    must be dropped so the pallas flow can't see matches gms/fod lost."""
+    rng = np.random.default_rng(15)
+    coords, mask = random_cloud(rng, 40, 64, grid=6)
+    pc = M.make_point_cloud(jnp.asarray(coords), jnp.asarray(mask))
+    small, _ = M.build_conv_maps(pc, 3, 1, cap=5, engine="v2")
+    assert small.inv is None
+    full, _ = M.build_conv_maps(pc, 3, 1, engine="v2")
+    assert full.inv is not None
+
+
+def test_v2_out_of_budget_raises_eagerly():
+    coords = np.array([[0, 40000, 0, 0], [0, 1, 1, 1]], np.int32)
+    pc = M.make_point_cloud(jnp.asarray(coords),
+                            jnp.asarray(np.ones(2, bool)))
+    with pytest.raises(ValueError, match="packed-key budget"):
+        M.build_conv_maps(pc, 3, 1, engine="v2")
+    # v1 handles the same cloud
+    maps, _ = M.build_conv_maps(pc, 3, 1, engine="v1")
+    assert int(np.sum(np.asarray(maps.valid))) >= 2
+
+
+def test_explicit_v2_raises_for_non_3d_default_falls_back():
+    coords = np.array([[0, 1, 2], [0, 3, 4]], np.int32)   # 2 spatial dims
+    pc = M.make_point_cloud(jnp.asarray(coords),
+                            jnp.asarray(np.ones(2, bool)))
+    maps, _ = M.build_conv_maps(pc, 3, 1)                 # default: v1 path
+    assert int(np.sum(np.asarray(maps.valid))) == 2
+    with pytest.raises(ValueError, match="3 spatial dims"):
+        M.build_conv_maps(pc, 3, 1, engine="v2")
+
+
+def test_build_conv_maps_reuses_cache():
+    """A supplied SortedCloud cache must produce the same maps as a fresh
+    sort (it IS the same computation, skipped)."""
+    rng = np.random.default_rng(14)
+    coords, mask = random_cloud(rng, 50, 64, grid=8)
+    pc = M.make_point_cloud(jnp.asarray(coords), jnp.asarray(mask))
+    sc = M.sort_cloud(pc)
+    fresh, _ = M.build_conv_maps(pc, 3, 1)
+    cached, _ = M.build_conv_maps(pc, 3, 1, cache=sc)
+    np.testing.assert_array_equal(np.asarray(fresh.in_idx),
+                                  np.asarray(cached.in_idx))
+    np.testing.assert_array_equal(np.asarray(fresh.valid),
+                                  np.asarray(cached.valid))
 
 
 def test_swap_roundtrip():

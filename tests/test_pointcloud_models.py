@@ -77,6 +77,69 @@ def test_minkunet(flow):
     assert np.all(np.asarray(out)[~mask] == 0)
 
 
+def _jaxprs_in(value):
+    if hasattr(value, "jaxpr"):                    # ClosedJaxpr
+        return [value.jaxpr]
+    if hasattr(value, "eqns"):                     # Jaxpr
+        return [value]
+    if isinstance(value, (list, tuple)):
+        return [j for v in value for j in _jaxprs_in(v)]
+    return []
+
+
+def _count_sort_eqns(jaxpr):
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "sort":
+            total += 1
+        for v in eqn.params.values():
+            total += sum(_count_sort_eqns(j) for j in _jaxprs_in(v))
+    return total
+
+
+def test_unet_maps_one_sort_per_level():
+    """Acceptance: the packed-key engine ranks each stride level exactly
+    once — n_stages+1 `lax.sort` calls for the whole network, versus one
+    (plus a compaction sort) per kernel offset per conv in v1."""
+    rng = np.random.default_rng(9)
+    coords, mask = random_cloud(rng, 100, 128, grid=16)
+    n_stages = 2
+
+    def build(c, m):
+        levels = MU.build_unet_maps(M.PointCloud(c, m, 1), n_stages)
+        return [(l["pc"].coords, l["subm"].in_idx,
+                 l.get("down", l["subm"]).in_idx) for l in levels]
+
+    jaxpr = jax.make_jaxpr(build)(jnp.asarray(coords), jnp.asarray(mask))
+    n_sorts = _count_sort_eqns(jaxpr.jaxpr)
+    assert n_sorts == n_stages + 1, n_sorts
+
+    def build_v1(c, m):
+        levels = MU.build_unet_maps(M.PointCloud(c, m, 1), n_stages,
+                                    engine="v1")
+        return [(l["pc"].coords, l["subm"].in_idx,
+                 l.get("down", l["subm"]).in_idx) for l in levels]
+
+    jaxpr1 = jax.make_jaxpr(build_v1)(jnp.asarray(coords), jnp.asarray(mask))
+    assert _count_sort_eqns(jaxpr1.jaxpr) > 3 * n_sorts
+
+
+def test_minkunet_engines_agree():
+    """Forward pass is identical whichever mapping engine built the maps."""
+    rng = np.random.default_rng(10)
+    coords, mask = random_cloud(rng, 60, 96, grid=12)
+    feats = jnp.asarray(rng.normal(size=(96, 4)).astype(np.float32))
+    feats = feats * jnp.asarray(mask)[:, None]
+    pc = M.make_point_cloud(jnp.asarray(coords), jnp.asarray(mask))
+    p = MU.mini_minkunet_init(jax.random.key(11))
+    lv2 = MU.build_unet_maps(pc, 2)
+    lv1 = MU.build_unet_maps(pc, 2, engine="v1")
+    a = MU.minkunet_apply(p, pc, feats, levels=lv2)
+    b = MU.minkunet_apply(p, pc, feats, levels=lv1)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-3, atol=2e-3)
+
+
 def test_minkunet_flows_identical():
     rng = np.random.default_rng(7)
     coords, mask = random_cloud(rng, 60, 96, grid=12)

@@ -5,7 +5,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 from jax import lax
-from hypothesis import given, settings, strategies as st
+from tests.hypothesis_compat import given, settings, st
 
 from repro.core import mapping as M
 from repro.core import sparseconv as SC
