@@ -1,8 +1,10 @@
 """Paper Fig. 17 (right): convolution computation flow —
 Gather-MatMul-Scatter vs Fetch-on-Demand.
 
-Measures wall time of both XLA flows + the Pallas FoD kernel (interpret
-mode), and derives the paper's real claim: DRAM traffic.  The analytic
+Measures wall time of both XLA flows + the two Pallas FoD kernels
+(interpret mode): the PR-1 whole-array-resident baseline (`pallas_fod`) and
+the streamed + fused-epilogue kernel (`pallas_fused`), with a numerical-
+parity assert of the fused kernel against the `fod` flow.  The analytic
 traffic model matches paper §4.2.3 / Fig. 11c:
   G-M-S: read features per map entry, write gathered matrix, read it back
          for the GEMM, write psums, read psums for scatter, write output.
@@ -11,6 +13,8 @@ traffic model matches paper §4.2.3 / Fig. 11c:
 """
 
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 import jax
@@ -42,6 +46,10 @@ def run(n_points=4096, cin=64, cout=64):
     rng = np.random.default_rng(0)
     feats = jnp.asarray(rng.normal(size=(n_points, cin)).astype(np.float32))
     w = jnp.asarray(rng.normal(size=(27, cin, cout)).astype(np.float32))
+    # key-sorted cloud: the canonical order the fused flow runs in
+    sc = M.sort_cloud(pc)
+    pc = M.PointCloud(jnp.take(pc.coords, sc.perm, axis=0),
+                      jnp.take(pc.mask, sc.perm), pc.stride)
     maps, out_pc = M.build_conv_maps(pc, 3, 1)
 
     gms = jax.jit(lambda f, w: SC.gather_matmul_scatter(
@@ -55,6 +63,14 @@ def run(n_points=4096, cin=64, cout=64):
     pall = jax.jit(lambda f, w: spops.sparse_conv_fod(
         f, maps, w, out_pc.capacity))
     us_pal = timeit(pall, feats, w)
+    fused = jax.jit(lambda f, w: SC.sparse_conv_apply(
+        f, maps, w, out_pc.capacity, flow="pallas_fused"))
+    us_fus = timeit(fused, feats, w)
+
+    # numerical parity: the fused streamed kernel == the XLA fod flow
+    np.testing.assert_allclose(np.asarray(fused(feats, w)),
+                               np.asarray(fod(feats, w)),
+                               rtol=1e-4, atol=1e-4)
 
     t_gms, t_fod, n_maps = traffic_model(maps, n_points, cin, cout)
     emit(f"convflow/gms_n{n_points}_c{cin}", us_gms,
@@ -63,9 +79,19 @@ def run(n_points=4096, cin=64, cout=64):
          f"dram_bytes={t_fod};traffic_saving={t_gms / t_fod:.2f}x")
     emit(f"convflow/pallas_fod_n{n_points}_c{cin}", us_pal,
          f"interpret_mode=1;maps={n_maps}")
+    emit(f"convflow/pallas_fused_n{n_points}_c{cin}", us_fus,
+         f"interpret_mode=1;parity=ok;"
+         f"speedup_vs_pallas={us_pal / us_fus:.2f}x")
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single small size (CI smoke)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        run(1024, 32, 32)
+        return
     run(2048, 32, 32)
     run(4096, 64, 64)
 

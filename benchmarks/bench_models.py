@@ -6,11 +6,17 @@ reproduce is the paper's *relative* story on this host:
   * for the SparseConv models, the PointAcc flow (FoD + ranking-based maps)
     vs the baseline flow (G-M-S) — the architectural delta the paper
     credits for its gains;
+  * the temporal-fusion point (§4.2.4): the streamed fused-epilogue Pallas
+    flow (`pallas_fused`) vs the PR-1 whole-array kernel (`pallas`), both
+    in CPU interpret parity mode, plus the Fig.-20-style DRAM model of the
+    epilogue traffic the fusion eliminates;
   * the Fig. 16 co-design point: MinkowskiUNet vs Mini-MinkowskiUNet
     latency at equal input.
 """
 
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 import jax
@@ -54,8 +60,8 @@ def bench_pointnet_family():
              f"points_per_s={B * N / (us / 1e6):.0f}")
 
 
-def bench_minknet():
-    coords, mask, feats = lidar_scene(3, 2048, grid=48)
+def bench_minknet(n_points=2048, grid=48):
+    coords, mask, feats = lidar_scene(3, n_points, grid=grid)
     pc = M.make_point_cloud(jnp.asarray(coords), jnp.asarray(mask))
     feats = jnp.asarray(feats)
     key = jax.random.key(1)
@@ -65,11 +71,31 @@ def bench_minknet():
     mini = MU.mini_minkunet_init(key, 4, 13)
 
     for name, params in [("minknet", full), ("mini-minknet", mini)]:
-        for flow in ("gms", "fod"):
-            fn = jax.jit(lambda p, f: MU.minkunet_apply(
+        times = {}
+        for flow in ("gms", "fod", "pallas", "pallas_fused"):
+            fn = jax.jit(lambda p, f, flow=flow: MU.minkunet_apply(
                 p, pc, f, flow=flow))
-            us = timeit(fn, params, feats)
-            emit(f"models/{name}_{flow}", us, "")
+            times[flow] = timeit(fn, params, feats)
+            emit(f"models/{name}_{flow}", times[flow], "")
+        # temporal-fusion acceptance row: fused vs baseline Pallas kernel
+        # (interpret parity run), with parity asserted against the fod flow
+        ref = jax.jit(lambda p, f: MU.minkunet_apply(p, pc, f, flow="fod"))
+        fus = jax.jit(lambda p, f: MU.minkunet_apply(
+            p, pc, f, flow="pallas_fused"))
+        np.testing.assert_allclose(np.asarray(fus(params, feats)),
+                                   np.asarray(ref(params, feats)),
+                                   rtol=1e-4, atol=1e-4)
+        speedup = times["pallas"] / times["pallas_fused"]
+        levels = MU.build_unet_maps(pc, len(params["enc"]))
+        unf = MU.epilogue_dram_bytes(params, levels, fused=False)
+        fsd = MU.epilogue_dram_bytes(params, levels, fused=True)
+        emit(f"models/{name}_fused_speedup", speedup,
+             f"pallas_us={times['pallas']:.0f};"
+             f"fused_us={times['pallas_fused']:.0f};parity=ok;"
+             f"speedup={speedup:.2f}x")
+        emit(f"models/{name}_epilogue_dram", float(unf / fsd),
+             f"unfused_bytes={unf};fused_bytes={fsd};"
+             f"reduction={unf / fsd:.2f}x")
 
     # Fig. 16 co-design ratio
     t_full = timeit(jax.jit(
@@ -80,9 +106,13 @@ def bench_minknet():
          f"mini_speedup={t_full / t_mini:.1f}x (paper: 100x w/ silicon)")
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller cloud (CI smoke)")
+    args = ap.parse_args(argv)
     bench_pointnet_family()
-    bench_minknet()
+    bench_minknet(*((1024, 32) if args.smoke else (2048, 48)))
 
 
 if __name__ == "__main__":

@@ -1,7 +1,8 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing + CSV/JSON emission."""
 
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable
 
@@ -32,3 +33,12 @@ def emit(name: str, us_per_call: float, derived: str = ""):
 
 def header():
     print("name,us_per_call,derived", flush=True)
+
+
+def dump_json(path: str):
+    """Write every emitted row as JSON: {name: {us_per_call, derived}}.
+    CI archives the file per commit so the perf trajectory is diffable."""
+    with open(path, "w") as f:
+        json.dump({name: {"us_per_call": us, "derived": derived}
+                   for name, us, derived in ROWS}, f, indent=2,
+                  sort_keys=True)

@@ -11,6 +11,15 @@ the remaining ones."
 This module reproduces that compilation pass.  The plan drives
 `repro.kernels.fused_mlp` (intermediates in VMEM scratch) and the
 `benchmarks/bench_fusion.py` DRAM-traffic reproduction of Fig. 20.
+
+`plan_conv_epilogue` extends the same search to sparse convolutions: a conv
+plus its epilogue (bias/norm/activation/residual) is a two-stage fusion
+group whose on-chip footprint is the resident weights, the output-stationary
+accumulator tile, the epilogue operand tiles, and a double-buffered feature
+cache block.  The planner picks the largest cache block (the paper's
+configurable cache-block size, §4.2.2) that fits the budget — fewest window
+sweeps — and declines to fuse only when even the smallest block overflows,
+exactly the FC procedure's 'discard the last layer' step.
 """
 
 from __future__ import annotations
@@ -75,6 +84,79 @@ def plan_fusion(layer_widths: Sequence[int],
                 _group_bytes(widths, CANDIDATE_TILES[-1], dtype_bytes)))
             start += 1
     return groups
+
+
+# candidate feature cache-block sizes (rows) for the streamed conv kernel;
+# multiples of the 8-sublane alignment, largest first (fewest window sweeps)
+CONV_FEAT_TILES = (65536, 32768, 16384, 8192, 4096, 2048, 1024, 512, 256,
+                   128, 64, 32, 16, 8)
+
+
+@dataclass(frozen=True)
+class ConvFusionPlan:
+    """Compile-time decision for one sparse conv + epilogue site."""
+
+    fuse: bool            # fold the epilogue into the kernel flush?
+    feat_tile: int        # feature cache-block rows (streaming window)
+    out_tile: int         # output-stationary tile rows
+    onchip_bytes: int     # estimated VMEM footprint of the fused group
+
+
+def plan_conv_epilogue(n_in: int, cin: int, cout: int, k: int, *,
+                       residual: bool = False, out_tile: int = 128,
+                       budget_bytes: int = DEFAULT_ONCHIP_BUDGET_BYTES,
+                       dtype_bytes: int = 4) -> ConvFusionPlan:
+    """Fusion plan for one sparse conv of K=`k` offsets, (cin -> cout)
+    channels over an `n_in`-row input cloud.
+
+    Resident regardless of cache block: all K weight tiles, the f32
+    accumulator, the output tile, the inverse-table slice, and (if fused)
+    the epilogue operands — a residual skip tile and the per-channel
+    norm/bias vectors.  The feature cache block is double-buffered.
+    """
+    weights = k * cin * cout * dtype_bytes
+    acc = out_tile * cout * 4                     # f32 scratch
+    out_t = out_tile * cout * dtype_bytes
+    inv = k * out_tile * 4
+    epi = (out_tile * cout * dtype_bytes if residual else 0) \
+        + 3 * cout * dtype_bytes + out_tile * dtype_bytes
+    fixed = weights + acc + out_t + inv + epi
+    # whole cloud resident first (one window, no sweeps), then shrinking
+    # stream blocks — largest fitting block wins
+    candidates = [_round_up(n_in, 8)] + [t for t in CONV_FEAT_TILES
+                                         if t < n_in]
+    for tile in candidates:
+        b = fixed + 2 * tile * cin * dtype_bytes  # double-buffered window
+        if b <= budget_bytes:
+            return ConvFusionPlan(True, tile, out_tile, b)
+    # epilogue operands don't fit on-chip next to the conv: stream the conv
+    # with the smallest block and run the epilogue layer-by-layer (the
+    # paper's 'discard the last layer and fuse the remaining ones').
+    tile = candidates[-1]
+    b = fixed - epi + 2 * tile * cin * dtype_bytes
+    return ConvFusionPlan(False, tile, out_tile, b)
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def dram_bytes_conv_epilogue(n_out: int, cout: int, *, residual: bool =
+                             False, fused: bool = True,
+                             dtype_bytes: int = 4) -> int:
+    """Epilogue-side DRAM traffic of one sparse conv layer (Fig. 20 model
+    applied to conv blocks).
+
+    Unfused: the kernel writes the pre-activation accumulator to DRAM, the
+    epilogue reads it back and writes the activation (plus a residual read).
+    Fused: the epilogue runs at flush — only the final activation is written
+    (the residual skip tile is still read once).
+    """
+    act = n_out * cout * dtype_bytes
+    res = act if residual else 0
+    if fused:
+        return act + res
+    return 3 * act + res
 
 
 def dram_bytes_unfused(n_points: int, layer_widths: Sequence[int],

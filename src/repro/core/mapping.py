@@ -89,25 +89,33 @@ class KernelMaps(NamedTuple):
     offset k (-1 if none).  The v2 engine emits it for free — its binary
     search is indexed by output row, so the hit positions ARE the inverse
     table — letting the Pallas FoD kernel skip the scatter pass that v1
-    needed (kernels/spconv/ops.invert_maps).  None on the v1 path and after
-    swap().
+    needed (kernels/spconv/ops.invert_maps).  None on the v1 path.
+
+    `inv_t` is the same table for the *swapped* maps: inv_t[k, i] = output
+    index feeding input i when the maps are used transposed (decoder
+    up-convolution).  The v2 engine computes it with one extra binary search
+    per offset (mapping.match_table) so `swap()` hands the Pallas kernel a
+    ready inverse table — the decoder never falls back to a scatter pass.
     """
 
     in_idx: jnp.ndarray   # (K, cap) int32, -1 padded
     out_idx: jnp.ndarray  # (K, cap) int32, -1 padded
     valid: jnp.ndarray    # (K, cap) bool
     offsets: np.ndarray   # (K, D) static numpy offsets (units of input stride)
-    inv: jnp.ndarray | None = None  # (K, out_cap) int32, -1 = no map
+    inv: jnp.ndarray | None = None    # (K, out_cap) int32, -1 = no map
+    inv_t: jnp.ndarray | None = None  # (K, in_cap) int32, -1 = no map
 
     def swap(self) -> "KernelMaps":
         """Transpose the maps: used for transposed (up-sampling) convolution.
 
         MinkowskiEngine-style: an upsample conv from coarse->fine reuses the
         maps of the corresponding fine->coarse conv with in/out roles swapped
-        (and mirrored weight offsets).
+        (and mirrored weight offsets).  The inverse tables swap roles with
+        them, so a v2-built map keeps its scatter-free Pallas path in both
+        directions.
         """
         return KernelMaps(self.out_idx, self.in_idx, self.valid,
-                          -self.offsets)
+                          -self.offsets, inv=self.inv_t, inv_t=self.inv)
 
 
 def make_point_cloud(coords: jnp.ndarray, mask: jnp.ndarray,
@@ -359,6 +367,29 @@ def downsample_sorted(sc: SortedCloud, factor: int = 2) -> SortedCloud:
     return SortedCloud(pc, c_hi, c_lo, jnp.arange(n, dtype=jnp.int32))
 
 
+def match_table(sc: SortedCloud, query_pc: PointCloud,
+                offsets) -> jnp.ndarray:
+    """table[k, j] = row of sc.pc at coords (query_pc.coords[j] + offsets[k]),
+    or -1 when that site is absent.
+
+    The primitive behind every v2 inverse table: pack the shifted query
+    coords and binary-search them against the cloud's sorted keys.  Pure
+    ranking — no scatter, no hash.  `offsets` is (K, D) static (numpy or
+    jnp); the batch column is never shifted.
+    """
+    n = sc.pc.capacity
+    q_spatial = query_pc.coords[None, :, 1:] + jnp.asarray(offsets)[:, None, :]
+    q_batch = jnp.broadcast_to(query_pc.coords[None, :, :1],
+                               (q_spatial.shape[0], query_pc.capacity, 1))
+    q_hi, q_lo = PK.pack_coords(jnp.concatenate([q_batch, q_spatial], -1),
+                                query_pc.mask[None, :])
+    pos = PK.searchsorted_pair(sc.sorted_hi, sc.sorted_lo, q_hi, q_lo)
+    posc = jnp.clip(pos, 0, n - 1)
+    hit = ((sc.sorted_hi[posc] == q_hi) & (sc.sorted_lo[posc] == q_lo)
+           & ~PK.is_sentinel_key(q_hi))
+    return jnp.where(hit, sc.perm[posc], jnp.int32(-1))
+
+
 def kernel_map_v2(in_sc: SortedCloud, out_pc: PointCloud, kernel_size: int,
                   cap: int | None = None) -> KernelMaps:
     """Packed-key kernel mapping: for output q and offset delta, the paired
@@ -421,9 +452,22 @@ def build_conv_maps_cached(sc: SortedCloud, kernel_size: int, stride: int,
 
     Returns (maps, out_sorted_cloud) so callers building a whole network can
     chain the cache level-to-level (minkunet.build_unet_maps does).
+
+    Strided maps additionally carry the swapped inverse table `inv_t`
+    (searching the coarse cloud from the fine coords), so the decoder's
+    transposed convs run the scatter-free Pallas path via `maps.swap()`.
+    The table is only exact while `cap` drops no matches — the default cap
+    covers every match, a user-supplied smaller one may not.
     """
     out_sc = sc if stride == 1 else downsample_sorted(sc, stride)
     maps = kernel_map_v2(sc, out_sc.pc, kernel_size, cap=cap)
+    resolved_cap = cap if cap is not None else min(sc.pc.capacity,
+                                                   out_sc.pc.capacity)
+    if stride > 1 and resolved_cap >= out_sc.pc.capacity:
+        # swapped orientation: fine output i under swapped offset -delta is
+        # fed by the coarse row at (fine_coords[i] - delta)
+        inv_t = match_table(out_sc, sc.pc, -maps.offsets)
+        maps = maps._replace(inv_t=inv_t)
     return maps, out_sc
 
 

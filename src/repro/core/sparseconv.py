@@ -34,8 +34,48 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import nn
 from repro.core.mapping import (KernelMaps, PointCloud, SortedCloud,
                                 build_conv_maps)
+
+
+class Epilogue(NamedTuple):
+    """Post-conv ops a sparse conv layer wants applied to its accumulator
+    (paper §4.2.4 temporal fusion, extended from FC chains to conv blocks).
+
+    Applied in this fixed order: +bias -> layernorm -> +residual -> ReLU ->
+    *mask.  Every field is optional (None / False = skip).  The XLA flows
+    apply it as ordinary post-ops (`apply_epilogue`); the fused Pallas flow
+    folds it into the kernel's flush so the pre-activation accumulator never
+    round-trips HBM.
+    """
+
+    bias: jnp.ndarray | None = None        # (Cout,)
+    ln_scale: jnp.ndarray | None = None    # (Cout,)
+    ln_bias: jnp.ndarray | None = None     # (Cout,)
+    relu: bool = False
+    mask: jnp.ndarray | None = None        # (M,) bool/float row validity
+    residual: jnp.ndarray | None = None    # (M, Cout) VMEM-resident skip
+
+
+def apply_epilogue(out: jnp.ndarray, epi: Epilogue | None) -> jnp.ndarray:
+    """Reference (XLA) realisation of `Epilogue` — the unfused path, and the
+    parity oracle for the fused kernel's flush."""
+    if epi is None:
+        return out
+    if (epi.ln_scale is None) != (epi.ln_bias is None):
+        raise ValueError("Epilogue.ln_scale and ln_bias must come together")
+    if epi.bias is not None:
+        out = out + epi.bias[None, :]
+    if epi.ln_scale is not None:
+        out = nn.layernorm({"scale": epi.ln_scale, "bias": epi.ln_bias}, out)
+    if epi.residual is not None:
+        out = out + epi.residual
+    if epi.relu:
+        out = jax.nn.relu(out)
+    if epi.mask is not None:
+        out = out * epi.mask.astype(out.dtype)[:, None]
+    return out
 
 
 def gather_matmul_scatter(features: jnp.ndarray, maps: KernelMaps,
@@ -83,14 +123,48 @@ def fetch_on_demand(features: jnp.ndarray, maps: KernelMaps,
 
 def sparse_conv_apply(features: jnp.ndarray, maps: KernelMaps,
                       weights: jnp.ndarray, out_cap: int,
-                      flow: str = "fod") -> jnp.ndarray:
+                      flow: str = "fod",
+                      epilogue: Epilogue | None = None,
+                      plan=None) -> jnp.ndarray:
+    """One sparse conv + optional fused epilogue.
+
+    flow selects the computation realisation:
+      gms / fod      — XLA flows; the epilogue runs as ordinary post-ops.
+      pallas         — baseline whole-array-resident Pallas kernel
+                       (epilogue as XLA post-ops): the PR-1 fast path, kept
+                       as the comparison baseline.
+      pallas_fused   — streamed + fused Pallas kernel: feature tiles stream
+                       through VMEM and the epilogue runs in the kernel's
+                       flush.  `plan` (core.fusion.ConvFusionPlan) sets the
+                       cache-block size; when the planner declines to fuse
+                       (plan.fuse False) the conv still streams but the
+                       epilogue falls back to XLA post-ops.
+    """
     if flow == "gms":
-        return gather_matmul_scatter(features, maps, weights, out_cap)
+        return apply_epilogue(
+            gather_matmul_scatter(features, maps, weights, out_cap), epilogue)
     if flow == "fod":
-        return fetch_on_demand(features, maps, weights, out_cap)
+        return apply_epilogue(
+            fetch_on_demand(features, maps, weights, out_cap), epilogue)
     if flow == "pallas":
         from repro.kernels.spconv import ops as spconv_ops
-        return spconv_ops.sparse_conv_fod(features, maps, weights, out_cap)
+        return apply_epilogue(
+            spconv_ops.sparse_conv_fod(features, maps, weights, out_cap),
+            epilogue)
+    if flow == "pallas_fused":
+        from repro.core import fusion as F
+        from repro.kernels.spconv import ops as spconv_ops
+        if plan is None:
+            plan = F.plan_conv_epilogue(
+                features.shape[0], features.shape[1], weights.shape[-1],
+                weights.shape[0],
+                residual=epilogue is not None
+                and epilogue.residual is not None)
+        epi = epilogue if plan.fuse else None
+        out = spconv_ops.sparse_conv_fused(
+            features, maps, weights, out_cap, epilogue=epi,
+            feat_tile=plan.feat_tile, out_tile=plan.out_tile)
+        return out if plan.fuse else apply_epilogue(out, epilogue)
     raise ValueError(f"unknown flow {flow!r}")
 
 
@@ -119,10 +193,18 @@ def sparse_conv(pc: PointCloud, features: jnp.ndarray, weights: jnp.ndarray,
 
 def sparse_conv_transposed(features: jnp.ndarray, maps: KernelMaps,
                            out_pc: PointCloud, weights: jnp.ndarray,
-                           flow: str = "fod") -> jnp.ndarray:
+                           flow: str = "fod",
+                           epilogue: Epilogue | None = None,
+                           plan=None) -> jnp.ndarray:
     """Transposed (up-sampling) conv: reuse the encoder's maps with in/out
     roles swapped (MinkowskiEngine semantics; paper §2.1.1 'upsampling is the
-    inverse of the corresponding downsampling')."""
+    inverse of the corresponding downsampling').  v2-built maps carry the
+    swapped inverse table, so the Pallas flows stay scatter-free here too.
+
+    With an explicit epilogue the caller owns masking (Epilogue.mask);
+    without one the legacy `* mask` post-op is kept."""
     out = sparse_conv_apply(features, maps.swap(), weights, out_pc.capacity,
-                            flow)
-    return out * out_pc.mask[:, None]
+                            flow, epilogue=epilogue, plan=plan)
+    if epilogue is None:
+        out = out * out_pc.mask[:, None]
+    return out

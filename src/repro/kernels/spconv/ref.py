@@ -1,6 +1,8 @@
-"""Pure-jnp oracle for the Fetch-on-Demand sparse conv kernel."""
+"""Pure-jnp oracles for the Fetch-on-Demand sparse conv kernels."""
 
 import jax.numpy as jnp
+
+from repro.core.sparseconv import Epilogue, apply_epilogue
 
 
 def spconv_fod_ref(features: jnp.ndarray, inv_idx: jnp.ndarray,
@@ -12,3 +14,12 @@ def spconv_fod_ref(features: jnp.ndarray, inv_idx: jnp.ndarray,
     out = jnp.einsum("kmc,kcd->md", rows, weights,
                      preferred_element_type=jnp.float32)
     return out.astype(features.dtype)
+
+
+def spconv_fod_fused_ref(features: jnp.ndarray, inv_idx: jnp.ndarray,
+                         weights: jnp.ndarray,
+                         epilogue: Epilogue | None = None) -> jnp.ndarray:
+    """Conv oracle + the shared XLA epilogue — what the fused kernel's
+    in-flush epilogue must reproduce."""
+    return apply_epilogue(spconv_fod_ref(features, inv_idx, weights),
+                          epilogue)

@@ -9,6 +9,17 @@ All kernel maps are computed once per resolution level by the Mapping Unit
 and shared across every conv at that level (MinkowskiEngine-style map
 caching); transposed convs reuse the downsampling maps swapped — both are
 PointAcc dataflows.
+
+Every conv carries its epilogue (layernorm / residual / ReLU / row-mask) as
+a `core.sparseconv.Epilogue`, so the executor is flow-uniform: the XLA
+flows run epilogues as post-ops, while `flow="pallas_fused"` consults the
+temporal-fusion planner (core.fusion.plan_conv_epilogue) per conv site and
+folds fusable epilogues into the Pallas kernel flush — the paper's §4.2.4
+fusion extended from FC chains to the conv trunk.  The fused flow first
+re-ranks the input cloud into packed-key order (one extra sort) so every
+level's features are key-sorted, inverse tables are monotone per offset,
+and the streamed kernel's cache-block windows stay tight; the head output
+is scattered back to the caller's row order.
 """
 
 from __future__ import annotations
@@ -20,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import nn
+from repro.core import fusion as FU
 from repro.core import mapping as M
 from repro.core import sparseconv as SC
 
@@ -42,13 +54,35 @@ def _block_init(key, c_in: int, c_out: int):
     return p
 
 
-def _block_apply(p, feats, maps, out_cap, mask, flow):
-    h = SC.sparse_conv_apply(feats, maps, p["conv1"], out_cap, flow)
-    h = jax.nn.relu(nn.layernorm(p["n1"], h))
-    h = SC.sparse_conv_apply(h, maps, p["conv2"], out_cap, flow)
-    h = nn.layernorm(p["n2"], h)
+def _norm_epilogue(n_params, mask, residual=None):
+    """Epilogue of every trunk conv: layernorm -> (+skip) -> ReLU -> mask."""
+    return SC.Epilogue(ln_scale=n_params["scale"], ln_bias=n_params["bias"],
+                       relu=True, mask=mask, residual=residual)
+
+
+def _conv_plan(flow, n_in, w, residual=False, budget=None):
+    """Planner hook: pick the cache-block size and the fuse/no-fuse decision
+    for one conv site (static shapes -> compile-time, like the paper)."""
+    if flow != "pallas_fused":
+        return None
+    return FU.plan_conv_epilogue(
+        n_in, w.shape[1], w.shape[2], w.shape[0], residual=residual,
+        budget_bytes=budget or FU.DEFAULT_ONCHIP_BUDGET_BYTES)
+
+
+def _block_apply(p, feats, maps, out_cap, mask, flow, budget=None):
+    e1 = _norm_epilogue(p["n1"], mask)
+    h = SC.sparse_conv_apply(feats, maps, p["conv1"], out_cap, flow,
+                             epilogue=e1,
+                             plan=_conv_plan(flow, feats.shape[0],
+                                             p["conv1"], budget=budget))
     skip = nn.dense(p["proj"], feats) if "proj" in p else feats
-    return jax.nn.relu(h + skip) * mask[:, None]
+    e2 = _norm_epilogue(p["n2"], mask, residual=skip)
+    return SC.sparse_conv_apply(h, maps, p["conv2"], out_cap, flow,
+                                epilogue=e2,
+                                plan=_conv_plan(flow, h.shape[0], p["conv2"],
+                                                residual=True,
+                                                budget=budget))
 
 
 def minkunet_init(key, c_in: int = 4, n_classes: int = 13,
@@ -133,40 +167,88 @@ def build_unet_maps(pc: M.PointCloud, n_stages: int,
 
 
 def minkunet_apply(params, pc: M.PointCloud, feats: jnp.ndarray,
-                   flow: str = "fod", levels=None):
+                   flow: str = "fod", levels=None,
+                   fused_budget: int | None = None):
+    """Forward pass.  flow="pallas_fused" runs the temporal-fusion fast
+    path: features re-ranked once into packed-key order, every conv through
+    the streamed fused-epilogue Pallas kernel (cache-block sizes from the
+    fusion planner under `fused_budget` bytes of VMEM), decoder up-convs on
+    the swapped inverse tables.  Pass precomputed `levels` (with a
+    key-sorted cloud for best streaming locality) to skip map building."""
     n_stages = len(params["enc"])
+    reorder = flow == "pallas_fused" and levels is None
+    if reorder:
+        # canonicalise once: the whole network runs in packed-key order so
+        # the streamed kernel's windows are tight at every level
+        order = M.sort_cloud(pc).perm
+        pc = M.PointCloud(jnp.take(pc.coords, order, axis=0),
+                          jnp.take(pc.mask, order), pc.stride)
+        feats = jnp.take(feats, order, axis=0)
     if levels is None:
         levels = build_unet_maps(pc, n_stages)
 
     l0 = levels[0]
-    h = SC.sparse_conv_apply(feats, l0["subm"], params["stem"],
-                             l0["pc"].capacity, flow)
-    h = jax.nn.relu(nn.layernorm(params["stem_n"], h)) * l0["pc"].mask[:, None]
+    h = SC.sparse_conv_apply(
+        feats, l0["subm"], params["stem"], l0["pc"].capacity, flow,
+        epilogue=_norm_epilogue(params["stem_n"], l0["pc"].mask),
+        plan=_conv_plan(flow, feats.shape[0], params["stem"],
+                        budget=fused_budget))
 
     skips = [h]
     for i, stage in enumerate(params["enc"]):
         lvl, nxt = levels[i], levels[i + 1]
-        h = SC.sparse_conv_apply(h, lvl["down"], stage["down"],
-                                 nxt["pc"].capacity, flow)
-        h = jax.nn.relu(nn.layernorm(stage["down_n"], h)) \
-            * nxt["pc"].mask[:, None]
+        h = SC.sparse_conv_apply(
+            h, lvl["down"], stage["down"], nxt["pc"].capacity, flow,
+            epilogue=_norm_epilogue(stage["down_n"], nxt["pc"].mask),
+            plan=_conv_plan(flow, h.shape[0], stage["down"],
+                            budget=fused_budget))
         for b in stage["blocks"]:
             h = _block_apply(b, h, nxt["subm"], nxt["pc"].capacity,
-                             nxt["pc"].mask, flow)
+                             nxt["pc"].mask, flow, budget=fused_budget)
         skips.append(h)
 
     for i, stage in enumerate(params["dec"]):
         lvl = levels[n_stages - 1 - i]          # target (finer) level
-        h = SC.sparse_conv_transposed(h, lvl["down"], lvl["pc"],
-                                      stage["up"], flow)
-        h = jax.nn.relu(nn.layernorm(stage["up_n"], h)) \
-            * lvl["pc"].mask[:, None]
+        h = SC.sparse_conv_transposed(
+            h, lvl["down"], lvl["pc"], stage["up"], flow,
+            epilogue=_norm_epilogue(stage["up_n"], lvl["pc"].mask),
+            plan=_conv_plan(flow, h.shape[0], stage["up"],
+                            budget=fused_budget))
         h = jnp.concatenate([h, skips[n_stages - 1 - i]], axis=-1)
         for b in stage["blocks"]:
             h = _block_apply(b, h, lvl["subm"], lvl["pc"].capacity,
-                             lvl["pc"].mask, flow)
+                             lvl["pc"].mask, flow, budget=fused_budget)
 
-    return nn.dense(params["head"], h) * pc.mask[:, None]
+    out = nn.dense(params["head"], h) * pc.mask[:, None]
+    if reorder:
+        out = jnp.zeros_like(out).at[order].set(out)
+    return out
+
+
+def epilogue_dram_bytes(params, levels, fused: bool) -> int:
+    """Fig.-20-style DRAM model for the conv epilogues of one forward pass:
+    sum `core.fusion.dram_bytes_conv_epilogue` over every conv site.  The
+    unfused total counts each conv's pre-activation write + read-back; the
+    fused total only the final activation writes (+ residual reads)."""
+    n_stages = len(params["enc"])
+
+    def site(n_out, w, residual=False):
+        return FU.dram_bytes_conv_epilogue(n_out, w.shape[2],
+                                           residual=residual, fused=fused)
+
+    def block(p, cap):
+        return site(cap, p["conv1"]) + site(cap, p["conv2"], residual=True)
+
+    total = site(levels[0]["pc"].capacity, params["stem"])
+    for i, stage in enumerate(params["enc"]):
+        cap = levels[i + 1]["pc"].capacity
+        total += site(cap, stage["down"])
+        total += sum(block(b, cap) for b in stage["blocks"])
+    for i, stage in enumerate(params["dec"]):
+        cap = levels[n_stages - 1 - i]["pc"].capacity
+        total += site(cap, stage["up"])
+        total += sum(block(b, cap) for b in stage["blocks"])
+    return total
 
 
 def mini_minkunet_init(key, c_in: int = 4, n_classes: int = 13):

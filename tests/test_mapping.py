@@ -197,8 +197,17 @@ def test_v2_inverse_table_matches_v1_scatter():
         np.testing.assert_array_equal(
             np.asarray(spconv_ops.invert_maps(m1, o1.capacity)),
             np.asarray(m2.inv))
-        # swapped maps drop inv and fall back to the scatter path
-        assert m2.swap().inv is None
+        # swapped strided maps carry the transposed inverse table (search-
+        # built, scatter-free) and it matches scatter-inverting the swapped
+        # v1 map lists; submanifold maps still fall back to the scatter
+        if stride > 1:
+            sw = m2.swap()
+            assert sw.inv is not None
+            np.testing.assert_array_equal(
+                np.asarray(spconv_ops.invert_maps(m1.swap(), pc.capacity)),
+                np.asarray(sw.inv))
+        else:
+            assert m2.swap().inv is None
 
 
 def test_downsample_sorted_matches_downsample():
