@@ -106,13 +106,47 @@ def bench_minknet(n_points=2048, grid=48):
          f"mini_speedup={t_full / t_mini:.1f}x (paper: 100x w/ silicon)")
 
 
+def bench_batched_serving(batch_sizes, n_points=512):
+    """Per-scene latency vs batch size through the vmapped serving entry
+    point (serve.engine.PointCloudEngine.segment_batch): one compiled
+    program segments B scenes, amortising dispatch + padding waste."""
+    from repro.data.synthetic import point_cloud_batch
+    from repro.serve.engine import PointCloudEngine
+
+    params = MU.mini_minkunet_init(jax.random.key(2), c_in=4, n_classes=2)
+    engine = PointCloudEngine(params, n_stages=2, flow="fod")
+    base_per_scene = None
+    for bsz in batch_sizes:
+        coords, mask, feats, _ = point_cloud_batch(
+            seed=1, step=0, batch=bsz, n_points=n_points)
+        coords = coords.reshape(bsz, n_points, 4)
+        mask = mask.reshape(bsz, n_points)
+        feats = feats.reshape(bsz, n_points, -1)
+        levels, _ = engine.levels_for(coords, mask, batched=True)
+
+        def serve(f, levels=levels, c=coords, m=mask):
+            return engine.segment_batch(c, m, f, levels=levels)[0]
+
+        us = timeit(serve, jnp.asarray(feats))
+        per_scene = us / bsz
+        if base_per_scene is None:
+            base_per_scene = per_scene
+        emit(f"models/minkunet_serve_batch{bsz}", us,
+             f"per_scene_us={per_scene:.0f};scenes={bsz};"
+             f"scaling_vs_b1={base_per_scene / per_scene:.2f}x")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="smaller cloud (CI smoke)")
+    ap.add_argument("--batch", default="1,2,4", metavar="B1,B2,...",
+                    help="batch sizes for the vmapped serving axis")
     args = ap.parse_args(argv)
     bench_pointnet_family()
     bench_minknet(*((1024, 32) if args.smoke else (2048, 48)))
+    sizes = [int(b) for b in args.batch.split(",") if b]
+    bench_batched_serving(sizes, n_points=256 if args.smoke else 512)
 
 
 if __name__ == "__main__":

@@ -4,7 +4,9 @@
   2. MMU+MXU: run one sparse convolution in all three flows
      (Gather-MatMul-Scatter, Fetch-on-Demand, Pallas FoD kernel) and check
      they agree.
-  3. Run Mini-MinkowskiUNet (the paper's co-designed model) on the scene.
+  3. The same conv through the `PointAccSession` frontend (repro.api) —
+     the one-object API new code should use.
+  4. Run Mini-MinkowskiUNet (the paper's co-designed model) on the scene.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,6 +15,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.api import PointAccSession
 from repro.core import mapping as M
 from repro.core import sparseconv as SC
 from repro.data.synthetic import lidar_scene
@@ -46,9 +49,24 @@ def main():
     print("flows agree (FoD vs Pallas kernel):",
           bool(jnp.allclose(y_fod, y_pal, atol=1e-4)))
 
+    # --- the same conv through the session frontend ----------------------
+    session = PointAccSession(flow="fod")
+    x = session.tensor(jnp.asarray(coords), jnp.asarray(mask), feats)
+    y = session.conv(x, w)               # kernel_size inferred from w
+    print("session conv agrees with raw flow:",
+          bool(jnp.allclose(y.feats, y_fod * x.mask[:, None], atol=1e-4)))
+    down = session.conv(x, jnp.asarray(
+        np.random.default_rng(1).normal(size=(8, 4, 16)).astype(np.float32)),
+        stride=2)
+    print(f"strided conv: stride {x.stride} -> {down.stride}, "
+          f"{int(down.num_valid())} coarse voxels "
+          "(transposed convs find these maps by stride-pair lookup)")
+
     # --- Mini-MinkowskiUNet forward --------------------------------------
     params = MU.mini_minkunet_init(jax.random.key(0), c_in=4, n_classes=2)
-    logits = MU.minkunet_apply(params, pc, feats, flow="fod")
+    logits = MU.minkunet_forward(
+        session, params, session.tensor(jnp.asarray(coords),
+                                        jnp.asarray(mask), feats))
     pred = jnp.argmax(logits, -1)
     print(f"Mini-MinkowskiUNet: logits {logits.shape}, "
           f"{int(jnp.sum((pred == 1) & pc.mask))} points predicted 'object'")

@@ -1,64 +1,35 @@
 """End-to-end driver (the paper's kind is an inference accelerator):
 serve batched point-cloud segmentation requests through Mini-MinkowskiUNet.
 
-Simulates a LiDAR stream: batches of synthetic scenes arrive, the engine
-voxelises them (Mapping Unit), runs the jit'd segmentation model
-(Fetch-on-Demand flow), and reports per-batch latency + throughput —
-the software analogue of the paper's Fig. 16 deployment.
+Simulates a LiDAR stream: batches of synthetic scenes arrive and are served
+through `repro.serve.engine.PointCloudEngine` — the `PointAccSession`
+frontend plus a `jax.vmap`-over-scenes entry point, so one compiled
+program segments the whole batch.  Per-batch latency + throughput are
+reported, the software analogue of the paper's Fig. 16 deployment.
 
 The Mapping Unit output (the ranked SortedCloud + every level's kernel
 maps) depends only on the coordinates, not the features, so repeated
 geometry — a parked scanner, multi-sweep aggregation, re-scored frames —
-is served from a digest-keyed cache: one cheap blake2b over the coordinate
-bytes decides whether the ranking sort + binary searches run at all.
+is served from the session's LRU digest-keyed MappingCache: one cheap
+blake2b over the coordinate bytes decides whether the ranking sort +
+binary searches run at all.
 
 Run:  PYTHONPATH=src python examples/serve_pointcloud.py [--batches 8]
-      [--distinct-scenes 2] [--flow fod]
+      [--distinct-scenes 2] [--flow fod] [--scenes 4]
 """
 
 import argparse
-import hashlib
 import time
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
-from repro.core import mapping as M
 from repro.data.synthetic import point_cloud_batch
 from repro.models import minkunet as MU
+from repro.serve.engine import PointCloudEngine
 
 N_POINTS = 1024
-BATCH_SCENES = 4
 N_STAGES = 2
-
-
-class MappingCache:
-    """Digest-keyed reuse of the Mapping Unit's work across requests.
-
-    Key: blake2b over the raw coordinate+mask bytes (cheap vs one ranking
-    sort, ~microseconds per request).  Value: the jit-built level pyramid
-    (SortedClouds + kernel maps) ready to feed minkunet_apply(levels=...).
-    """
-
-    def __init__(self, n_stages: int):
-        self._levels = {}
-        self.hits = 0
-        self.misses = 0
-        self._build = jax.jit(lambda c, m: MU.build_unet_maps(
-            M.PointCloud(c, m, 1), n_stages))
-
-    def levels_for(self, coords: np.ndarray, mask: np.ndarray):
-        key = hashlib.blake2b(coords.tobytes() + mask.tobytes(),
-                              digest_size=16).digest()
-        hit = key in self._levels
-        if hit:
-            self.hits += 1
-        else:
-            self.misses += 1
-            self._levels[key] = jax.block_until_ready(
-                self._build(jnp.asarray(coords), jnp.asarray(mask)))
-        return self._levels[key], hit
 
 
 def main():
@@ -68,44 +39,48 @@ def main():
                     help="geometry repeats every N batches (cache hits)")
     ap.add_argument("--flow", default="fod",
                     choices=["fod", "gms", "pallas", "pallas_fused"])
+    ap.add_argument("--scenes", type=int, default=4,
+                    help="scenes per batch (the vmapped axis)")
     args = ap.parse_args()
 
     params = MU.mini_minkunet_init(jax.random.key(0), c_in=4, n_classes=2)
-    cache = MappingCache(N_STAGES)
-
-    @jax.jit
-    def serve(levels, coords, mask, feats):
-        pc = M.PointCloud(coords, mask, 1)
-        logits = MU.minkunet_apply(params, pc, feats, flow=args.flow,
-                                   levels=levels)
-        return jnp.argmax(logits, -1)
+    engine = PointCloudEngine(params, N_STAGES, flow=args.flow)
 
     lat, map_ms, n_pts = [], [], 0
     for b in range(args.batches):
         coords, mask, feats, labels = point_cloud_batch(
-            seed=1, step=b % args.distinct_scenes, batch=BATCH_SCENES,
+            seed=1, step=b % args.distinct_scenes, batch=args.scenes,
             n_points=N_POINTS)
+        # per-scene arrays for the vmapped entry point
+        coords = coords.reshape(args.scenes, N_POINTS, 4)
+        mask = mask.reshape(args.scenes, N_POINTS)
+        feats = feats.reshape(args.scenes, N_POINTS, -1)
+        labels = labels.reshape(args.scenes, N_POINTS)
+
         t0 = time.perf_counter()
-        levels, hit = cache.levels_for(coords, mask)
+        levels, hit = engine.levels_for(coords, mask, batched=True)
         t1 = time.perf_counter()
-        pred = np.asarray(serve(levels, jnp.asarray(coords),
-                                jnp.asarray(mask), jnp.asarray(feats)))
+        pred, _ = engine.segment_batch(coords, mask, feats, levels=levels)
+        pred = np.asarray(pred)
         dt = time.perf_counter() - t0
         acc = (pred[mask] == labels[mask]).mean()
         if b >= args.distinct_scenes:  # skip compile + first-sight batches
             lat.append(dt)
             map_ms.append((t1 - t0) * 1e3)
             n_pts += int(mask.sum())
-        print(f"batch {b}: {BATCH_SCENES} scenes, "
+        print(f"batch {b}: {args.scenes} scenes, "
               f"{int(mask.sum())} points, {dt * 1e3:.1f} ms "
               f"(mapping {'hit' if hit else 'miss'}"
               f" {(t1 - t0) * 1e3:.2f} ms), untrained-acc {acc:.2f}")
 
     if lat:
+        stats = engine.cache_stats()
         print(f"\nsteady-state: {np.mean(lat) * 1e3:.1f} ms/batch, "
               f"{n_pts / sum(lat):.0f} points/s "
-              f"({BATCH_SCENES / np.mean(lat):.1f} scenes/s); "
-              f"mapping cache {cache.hits} hits / {cache.misses} misses, "
+              f"({args.scenes / np.mean(lat):.1f} scenes/s); "
+              f"mapping cache {stats['hits']} hits / "
+              f"{stats['misses']} misses "
+              f"({stats['entries']}/{stats['max_entries']} entries), "
               f"{np.mean(map_ms):.2f} ms/batch on mapping")
 
 

@@ -5,7 +5,6 @@ Run after the baseline/optimized/multi-pod sweeps complete:
 """
 
 import json
-import re
 import sys
 
 sys.path.insert(0, ".")

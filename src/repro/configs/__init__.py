@@ -4,3 +4,5 @@ Use `repro.configs.get(name)` / `repro.configs.list_archs()`.
 """
 
 from repro.configs.base import ArchConfig, get, list_archs, register
+
+__all__ = ["ArchConfig", "get", "list_archs", "register"]

@@ -41,7 +41,6 @@ Two ranking engines coexist:
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Sequence
 
 import jax
@@ -105,7 +104,7 @@ class KernelMaps(NamedTuple):
     inv: jnp.ndarray | None = None    # (K, out_cap) int32, -1 = no map
     inv_t: jnp.ndarray | None = None  # (K, in_cap) int32, -1 = no map
 
-    def swap(self) -> "KernelMaps":
+    def swap(self, require_inverse: bool = False) -> "KernelMaps":
         """Transpose the maps: used for transposed (up-sampling) convolution.
 
         MinkowskiEngine-style: an upsample conv from coarse->fine reuses the
@@ -113,7 +112,20 @@ class KernelMaps(NamedTuple):
         (and mirrored weight offsets).  The inverse tables swap roles with
         them, so a v2-built map keeps its scatter-free Pallas path in both
         directions.
+
+        Maps built by the v1 engine (or a v2 build whose explicit `cap`
+        dropped the tables) carry NO transposed inverse table: the Pallas
+        flows then rebuild one with a scatter pass (numerically identical,
+        just not scatter-free).  Pass `require_inverse=True` to make that
+        silent downgrade a loud error instead.
         """
+        if require_inverse and self.inv_t is None:
+            raise ValueError(
+                "swapped maps carry no inverse table (inv_t is None): the "
+                "maps were built by the v1 engine or with an explicit cap "
+                "that dropped them.  The Pallas flows would fall back to a "
+                "scatter-built inverse; rebuild the maps with engine='v2' "
+                "and the default cap for the scatter-free transposed path")
         return KernelMaps(self.out_idx, self.in_idx, self.valid,
                           -self.offsets, inv=self.inv_t, inv_t=self.inv)
 
@@ -447,11 +459,14 @@ def _fit_cols(a: jnp.ndarray, cap: int, fill) -> jnp.ndarray:
 
 
 def build_conv_maps_cached(sc: SortedCloud, kernel_size: int, stride: int,
-                           cap: int | None = None):
+                           cap: int | None = None,
+                           out_sc: SortedCloud | None = None):
     """v2 `build_conv_maps` against an existing SortedCloud cache.
 
     Returns (maps, out_sorted_cloud) so callers building a whole network can
-    chain the cache level-to-level (minkunet.build_unet_maps does).
+    chain the cache level-to-level (core.tensor.MapContext does).  Pass
+    `out_sc` when the downsampled output cloud is already ranked (a context
+    cache) to skip recomputing it.
 
     Strided maps additionally carry the swapped inverse table `inv_t`
     (searching the coarse cloud from the fine coords), so the decoder's
@@ -459,7 +474,8 @@ def build_conv_maps_cached(sc: SortedCloud, kernel_size: int, stride: int,
     The table is only exact while `cap` drops no matches — the default cap
     covers every match, a user-supplied smaller one may not.
     """
-    out_sc = sc if stride == 1 else downsample_sorted(sc, stride)
+    if out_sc is None:
+        out_sc = sc if stride == 1 else downsample_sorted(sc, stride)
     maps = kernel_map_v2(sc, out_sc.pc, kernel_size, cap=cap)
     resolved_cap = cap if cap is not None else min(sc.pc.capacity,
                                                    out_sc.pc.capacity)

@@ -12,7 +12,6 @@ pushed to +inf distance so ranking ignores them.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -27,7 +27,7 @@ Both flows are numerically identical; tests cross-check them against a dense
 
 from __future__ import annotations
 
-import functools
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -201,9 +201,22 @@ def sparse_conv_transposed(features: jnp.ndarray, maps: KernelMaps,
     inverse of the corresponding downsampling').  v2-built maps carry the
     swapped inverse table, so the Pallas flows stay scatter-free here too.
 
+    Maps without a transposed inverse table (v1 engine, capped v2 builds)
+    still work on every flow, but the Pallas flows must rebuild the inverse
+    with a scatter pass — that downgrade is surfaced with a warning rather
+    than assumed away (use `maps.swap(require_inverse=True)` directly for a
+    hard error).
+
     With an explicit epilogue the caller owns masking (Epilogue.mask);
     without one the legacy `* mask` post-op is kept."""
-    out = sparse_conv_apply(features, maps.swap(), weights, out_pc.capacity,
+    swapped = maps.swap()
+    if flow in ("pallas", "pallas_fused") and swapped.inv is None:
+        warnings.warn(
+            "transposed conv on maps without an inverse table (built with "
+            "engine='v1' or an explicit cap): the Pallas flow falls back "
+            "to a scatter-built inverse — rebuild the maps with "
+            "engine='v2' for the scatter-free path", stacklevel=2)
+    out = sparse_conv_apply(features, swapped, weights, out_pc.capacity,
                             flow, epilogue=epilogue, plan=plan)
     if epilogue is None:
         out = out * out_pc.mask[:, None]

@@ -23,7 +23,6 @@ and ONLY the cross-pod hop is compressed.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Tuple
 
 import jax

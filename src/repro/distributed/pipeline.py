@@ -19,7 +19,6 @@ so it differentiates: backward runs the reverse pipeline automatically.
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -19,11 +19,9 @@ counts (e.g. qwen1.5 kv=40, xlstm H=4) fall back to replication on that dim.
 from __future__ import annotations
 
 import dataclasses
-import re
-from typing import Any, Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 

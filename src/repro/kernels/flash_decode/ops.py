@@ -8,7 +8,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_decode.flash_decode import flash_decode_pallas
-from repro.kernels.flash_decode.ref import flash_decode_ref
 
 
 def _round_up(x: int, m: int) -> int:

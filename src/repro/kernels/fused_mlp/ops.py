@@ -10,7 +10,6 @@ import jax.numpy as jnp
 
 from repro.core.fusion import plan_fusion
 from repro.kernels.fused_mlp.fused_mlp import fused_mlp_pallas
-from repro.kernels.fused_mlp.ref import fused_mlp_ref
 
 
 def _round_up(x: int, m: int) -> int:

@@ -9,7 +9,6 @@ the Gather-MatMul-Scatter baseline for the Fig.17-style comparison.
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

@@ -25,7 +25,6 @@ import argparse
 import json
 import time
 import traceback
-from typing import Optional
 
 import numpy as np
 

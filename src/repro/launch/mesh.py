@@ -8,7 +8,6 @@ XLA_FLAGS before any jax initialisation.
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -13,9 +13,6 @@ and resumes from the newest committed checkpoint automatically.
 from __future__ import annotations
 
 import argparse
-import json
-import os
-import time
 
 import numpy as np
 

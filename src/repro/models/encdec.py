@@ -9,7 +9,6 @@ per layer and the cross-attn K/V once (computed at prefill).
 
 from __future__ import annotations
 
-import math
 from typing import NamedTuple, Optional
 
 import jax

@@ -12,8 +12,7 @@ Modes: "train" (no state), "prefill" (produce per-body states), "decode"
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -5,21 +5,25 @@ Structure: submanifold stem -> N encoder stages (stride-2 down conv +
 residual blocks) -> N decoder stages (transposed conv back onto the cached
 finer cloud + skip concat + residual blocks) -> linear head.
 
-All kernel maps are computed once per resolution level by the Mapping Unit
-and shared across every conv at that level (MinkowskiEngine-style map
-caching); transposed convs reuse the downsampling maps swapped — both are
-PointAcc dataflows.
+The network is written against the `PointAccSession` frontend
+(`repro.api`): every conv is `session.conv` / `session.conv_transposed`
+on a `SparseTensor`, and the tensor's shared `MapContext` owns what used
+to be hand-threaded — one `SortedCloud` ranking sort per stride level,
+kernel maps shared by every conv at that level, swapped inverse maps for
+the decoder found by stride-pair lookup, and per-site temporal-fusion
+plans.  Every conv carries its epilogue (layernorm / residual / ReLU /
+row-mask) as a `core.sparseconv.Epilogue`, so the executor is
+flow-uniform: the XLA flows run epilogues as post-ops while
+`flow="pallas_fused"` folds fusable epilogues into the Pallas kernel
+flush (paper §4.2.4 fusion extended from FC chains to the conv trunk).
+For the fused flow the forward first canonicalises the cloud into
+packed-key order — reusing the context's one ranking sort, so the whole
+network still costs one `lax.sort` per stride level — and scatters the
+head output back to the caller's row order.
 
-Every conv carries its epilogue (layernorm / residual / ReLU / row-mask) as
-a `core.sparseconv.Epilogue`, so the executor is flow-uniform: the XLA
-flows run epilogues as post-ops, while `flow="pallas_fused"` consults the
-temporal-fusion planner (core.fusion.plan_conv_epilogue) per conv site and
-folds fusable epilogues into the Pallas kernel flush — the paper's §4.2.4
-fusion extended from FC chains to the conv trunk.  The fused flow first
-re-ranks the input cloud into packed-key order (one extra sort) so every
-level's features are key-sorted, inverse tables are monotone per offset,
-and the streamed kernel's cache-block windows stay tight; the head output
-is scattered back to the caller's row order.
+`minkunet_apply` / `build_unet_maps` keep their PR-2 signatures as thin
+shims over the session API (serving code passes prebuilt level pyramids
+through them).
 """
 
 from __future__ import annotations
@@ -31,9 +35,11 @@ import jax
 import jax.numpy as jnp
 
 from repro import nn
+from repro.api import PointAccSession
 from repro.core import fusion as FU
 from repro.core import mapping as M
 from repro.core import sparseconv as SC
+from repro.core.tensor import MapContext, SparseTensor
 
 
 def conv_w_init(key, k: int, c_in: int, c_out: int, dtype=jnp.float32):
@@ -58,31 +64,6 @@ def _norm_epilogue(n_params, mask, residual=None):
     """Epilogue of every trunk conv: layernorm -> (+skip) -> ReLU -> mask."""
     return SC.Epilogue(ln_scale=n_params["scale"], ln_bias=n_params["bias"],
                        relu=True, mask=mask, residual=residual)
-
-
-def _conv_plan(flow, n_in, w, residual=False, budget=None):
-    """Planner hook: pick the cache-block size and the fuse/no-fuse decision
-    for one conv site (static shapes -> compile-time, like the paper)."""
-    if flow != "pallas_fused":
-        return None
-    return FU.plan_conv_epilogue(
-        n_in, w.shape[1], w.shape[2], w.shape[0], residual=residual,
-        budget_bytes=budget or FU.DEFAULT_ONCHIP_BUDGET_BYTES)
-
-
-def _block_apply(p, feats, maps, out_cap, mask, flow, budget=None):
-    e1 = _norm_epilogue(p["n1"], mask)
-    h = SC.sparse_conv_apply(feats, maps, p["conv1"], out_cap, flow,
-                             epilogue=e1,
-                             plan=_conv_plan(flow, feats.shape[0],
-                                             p["conv1"], budget=budget))
-    skip = nn.dense(p["proj"], feats) if "proj" in p else feats
-    e2 = _norm_epilogue(p["n2"], mask, residual=skip)
-    return SC.sparse_conv_apply(h, maps, p["conv2"], out_cap, flow,
-                                epilogue=e2,
-                                plan=_conv_plan(flow, h.shape[0], p["conv2"],
-                                                residual=True,
-                                                budget=budget))
 
 
 def minkunet_init(key, c_in: int = 4, n_classes: int = 13,
@@ -124,105 +105,136 @@ def minkunet_init(key, c_in: int = 4, n_classes: int = 13,
     return params
 
 
+# ---------------------------------------------------------------------------
+# session-native forward
+# ---------------------------------------------------------------------------
+
+def _block_forward(session: PointAccSession, p, x: SparseTensor):
+    """One residual block: two submanifold convs with fused epilogues."""
+    h = session.conv(x, p["conv1"],
+                     epilogue=_norm_epilogue(p["n1"], x.mask))
+    skip = nn.dense(p["proj"], x.feats) if "proj" in p else x.feats
+    return session.conv(h, p["conv2"],
+                        epilogue=_norm_epilogue(p["n2"], x.mask,
+                                                residual=skip))
+
+
+def minkunet_forward(session: PointAccSession, params,
+                     x: SparseTensor) -> jnp.ndarray:
+    """Forward pass through the session frontend.
+
+    The session picks the flow/engine/fusion budget; the tensor's
+    MapContext accumulates clouds and maps as the convs demand them (one
+    ranking sort per stride level).  For `flow="pallas_fused"` on a fresh
+    context the cloud is first canonicalised into packed-key order
+    (reusing the context's sort) so the streamed kernel's cache-block
+    windows stay tight; the head output is scattered back to the caller's
+    row order.  A context that already carries maps (e.g. rebuilt from a
+    cached level pyramid) is used as-is.
+    """
+    n_stages = len(params["enc"])
+    order = None
+    if session.config.flow == "pallas_fused" and not x.context.maps:
+        x, order = session.canonicalized(x)
+
+    h = session.conv(x, params["stem"],
+                     epilogue=_norm_epilogue(params["stem_n"], x.mask))
+
+    skips = [h]
+    for stage in params["enc"]:
+        out_mask = session.out_cloud(h, 2).mask
+        h = session.conv(h, stage["down"], stride=2,
+                         epilogue=_norm_epilogue(stage["down_n"], out_mask))
+        for b in stage["blocks"]:
+            h = _block_forward(session, b, h)
+        skips.append(h)
+
+    for i, stage in enumerate(params["dec"]):
+        skip = skips[n_stages - 1 - i]          # target (finer) level
+        h = session.conv_transposed(
+            h, stage["up"], stride=2,
+            epilogue=_norm_epilogue(stage["up_n"], skip.mask))
+        h = h.with_feats(jnp.concatenate([h.feats, skip.feats], axis=-1))
+        for b in stage["blocks"]:
+            h = _block_forward(session, b, h)
+
+    out = nn.dense(params["head"], h.feats) * h.mask[:, None]
+    if order is not None:
+        out = jnp.zeros_like(out).at[order].set(out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# level-pyramid shims (serving caches pass prebuilt pyramids around)
+# ---------------------------------------------------------------------------
+
 def build_unet_maps(pc: M.PointCloud, n_stages: int,
                     engine: str | None = None):
     """Mapping-Unit pass: clouds + kernel maps for every resolution level.
 
     Returns per-level dicts with the submanifold (k=3) maps, the stride-2
-    down maps into the next level, and the level's point cloud.  Decoder
-    reuses `down` swapped.
+    down maps into the next level, and the level's point cloud — the
+    serialisable form of a `MapContext` (see `_context_from_levels` for
+    the way back).  Decoder reuses `down` swapped.
 
     With the packed-key engine (default) each level's cloud is ranked
-    exactly ONCE: the level's SortedCloud serves its 27 submanifold offsets
-    AND the 8 down-conv offsets, and `downsample_sorted` hands the next
-    level its cloud already sorted — one `lax.sort` per stride level for the
-    entire network, every conv afterwards is binary search.
+    exactly ONCE: the level's SortedCloud serves its 27 submanifold
+    offsets AND the 8 down-conv offsets, and the downsample hands the next
+    level its cloud already sorted — one `lax.sort` per stride level for
+    the entire network, every conv afterwards is binary search.
     """
-    resolved = engine or M.DEFAULT_ENGINE
+    ctx = MapContext(engine=engine)
+    ctx.register_cloud(pc.stride, pc)
     levels = []
-    if resolved == "v2" and pc.ndim_spatial == 3:
-        sc = M.sort_cloud(pc)
-        for i in range(n_stages + 1):
-            subm, _ = M.build_conv_maps_cached(sc, kernel_size=3, stride=1)
-            level = {"pc": sc.pc, "cloud": sc, "subm": subm}
-            if i < n_stages:
-                down, nxt = M.build_conv_maps_cached(sc, kernel_size=2,
-                                                     stride=2)
-                level["down"] = down
-                sc = nxt
-            levels.append(level)
-        return levels
-    cur = pc
+    stride = pc.stride
     for i in range(n_stages + 1):
-        subm, _ = M.build_conv_maps(cur, kernel_size=3, stride=1,
-                                    engine=engine)
-        level = {"pc": cur, "subm": subm}
+        subm, _ = ctx.conv_maps(3, stride, 1)
+        level = {"pc": ctx.point_cloud(stride), "subm": subm}
+        if ctx.engine == "v2":
+            level["cloud"] = ctx.sorted_cloud(stride)
         if i < n_stages:
-            down, nxt = M.build_conv_maps(cur, kernel_size=2, stride=2,
-                                          engine=engine)
-            level["down"] = down
-            cur = nxt
+            level["down"], _ = ctx.conv_maps(2, stride, 2)
+            stride *= 2
         levels.append(level)
     return levels
+
+
+def _context_from_levels(levels, base_stride: int = 1) -> MapContext:
+    """Rebuild a MapContext from a `build_unet_maps` level pyramid.
+
+    Level pyramids that crossed a jit boundary carry array-ified stride
+    leaves, so strides are reassigned statically (level i sits at
+    base_stride * 2^i — the UNet convention the pyramid was built with).
+    """
+    engine = "v2" if any("cloud" in lv for lv in levels) else "v1"
+    ctx = MapContext(engine=engine)
+    stride = base_stride
+    for level in levels:
+        ctx.clouds[stride] = level.get("cloud", level["pc"])
+        ctx.maps[(3, stride, stride)] = level["subm"]
+        if "down" in level:
+            ctx.maps[(2, stride, 2 * stride)] = level["down"]
+        stride *= 2
+    return ctx
 
 
 def minkunet_apply(params, pc: M.PointCloud, feats: jnp.ndarray,
                    flow: str = "fod", levels=None,
                    fused_budget: int | None = None):
-    """Forward pass.  flow="pallas_fused" runs the temporal-fusion fast
-    path: features re-ranked once into packed-key order, every conv through
-    the streamed fused-epilogue Pallas kernel (cache-block sizes from the
-    fusion planner under `fused_budget` bytes of VMEM), decoder up-convs on
-    the swapped inverse tables.  Pass precomputed `levels` (with a
-    key-sorted cloud for best streaming locality) to skip map building."""
-    n_stages = len(params["enc"])
-    reorder = flow == "pallas_fused" and levels is None
-    if reorder:
-        # canonicalise once: the whole network runs in packed-key order so
-        # the streamed kernel's windows are tight at every level
-        order = M.sort_cloud(pc).perm
-        pc = M.PointCloud(jnp.take(pc.coords, order, axis=0),
-                          jnp.take(pc.mask, order), pc.stride)
-        feats = jnp.take(feats, order, axis=0)
-    if levels is None:
-        levels = build_unet_maps(pc, n_stages)
+    """Deprecated shim over the session API (kept for PR-2 call sites).
 
-    l0 = levels[0]
-    h = SC.sparse_conv_apply(
-        feats, l0["subm"], params["stem"], l0["pc"].capacity, flow,
-        epilogue=_norm_epilogue(params["stem_n"], l0["pc"].mask),
-        plan=_conv_plan(flow, feats.shape[0], params["stem"],
-                        budget=fused_budget))
-
-    skips = [h]
-    for i, stage in enumerate(params["enc"]):
-        lvl, nxt = levels[i], levels[i + 1]
-        h = SC.sparse_conv_apply(
-            h, lvl["down"], stage["down"], nxt["pc"].capacity, flow,
-            epilogue=_norm_epilogue(stage["down_n"], nxt["pc"].mask),
-            plan=_conv_plan(flow, h.shape[0], stage["down"],
-                            budget=fused_budget))
-        for b in stage["blocks"]:
-            h = _block_apply(b, h, nxt["subm"], nxt["pc"].capacity,
-                             nxt["pc"].mask, flow, budget=fused_budget)
-        skips.append(h)
-
-    for i, stage in enumerate(params["dec"]):
-        lvl = levels[n_stages - 1 - i]          # target (finer) level
-        h = SC.sparse_conv_transposed(
-            h, lvl["down"], lvl["pc"], stage["up"], flow,
-            epilogue=_norm_epilogue(stage["up_n"], lvl["pc"].mask),
-            plan=_conv_plan(flow, h.shape[0], stage["up"],
-                            budget=fused_budget))
-        h = jnp.concatenate([h, skips[n_stages - 1 - i]], axis=-1)
-        for b in stage["blocks"]:
-            h = _block_apply(b, h, lvl["subm"], lvl["pc"].capacity,
-                             lvl["pc"].mask, flow, budget=fused_budget)
-
-    out = nn.dense(params["head"], h) * pc.mask[:, None]
-    if reorder:
-        out = jnp.zeros_like(out).at[order].set(out)
-    return out
+    Equivalent to building a `PointAccSession` with (flow, fused_budget)
+    and running `minkunet_forward`; pass precomputed `levels` (a
+    `build_unet_maps` pyramid, e.g. from a serving cache) to skip map
+    building.  New code should hold a session and call
+    `minkunet_forward(session, params, session.tensor(...))` directly.
+    """
+    session = PointAccSession(flow=flow, fused_budget=fused_budget)
+    context = _context_from_levels(levels, pc.stride) \
+        if levels is not None else None
+    x = session.tensor(pc.coords, pc.mask, feats, stride=pc.stride,
+                       context=context)
+    return minkunet_forward(session, params, x)
 
 
 def epilogue_dram_bytes(params, levels, fused: bool) -> int:

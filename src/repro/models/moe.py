@@ -20,7 +20,6 @@ The aux load-balance loss (Switch-style) is returned alongside.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -9,8 +9,7 @@ compute structure); noted in DESIGN.md.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

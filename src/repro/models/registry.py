@@ -16,8 +16,7 @@ decode: tokens (B,1), positions (B,1[,3]), cache_pos (B,)
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -149,7 +148,7 @@ def _build_encdec(cfg: ArchConfig) -> Model:
                    enc_len: Optional[int] = None):
         enc_len = enc_len or max_len
         hd = cfg.resolved_head_dim
-        from repro.models.layers import KVCache, init_kv_cache
+        from repro.models.layers import init_kv_cache
         one = ED.DecLayerState(
             self_kv=init_kv_cache(cfg, batch_size, max_len, dtype),
             cross=ED.CrossCache(

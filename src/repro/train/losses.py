@@ -6,7 +6,6 @@ optimization recorded in EXPERIMENTS.md §Perf."""
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

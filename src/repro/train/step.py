@@ -9,7 +9,6 @@ whose in/out shardings are produced alongside (for pjit + the dry-run).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax
@@ -17,7 +16,6 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro import nn
-from repro.configs.base import ArchConfig
 from repro.distributed import sharding as SH
 from repro.models.registry import Model
 from repro.train import losses as LO

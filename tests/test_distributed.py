@@ -4,13 +4,11 @@ Each test runs in a subprocess with XLA_FLAGS=--xla_force_host_platform_
 device_count=8 so the main pytest process keeps its single-device view.
 """
 
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
-import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -3,7 +3,6 @@ consistency with the model's decode attention path."""
 
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_decode import ops as fd_ops

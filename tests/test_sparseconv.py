@@ -2,9 +2,7 @@
 
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
-from jax import lax
 from tests.hypothesis_compat import given, settings, st
 
 from repro.core import mapping as M

@@ -6,11 +6,10 @@ import signal
 import time
 
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 
-from repro import configs, nn
+from repro import configs
 from repro.models import registry
 from repro.train import losses as LO
 from repro.train import optim as OPT
