@@ -107,33 +107,74 @@ def bench_minknet(n_points=2048, grid=48):
 
 
 def bench_batched_serving(batch_sizes, n_points=512):
-    """Per-scene latency vs batch size through the vmapped serving entry
-    point (serve.engine.PointCloudEngine.segment_batch): one compiled
-    program segments B scenes, amortising dispatch + padding waste."""
+    """Per-scene latency vs batch size through the scheduler-backed
+    serving entry point (serve.engine.PointCloudEngine.segment_batch):
+    one compiled program segments each micro-batch, amortising dispatch;
+    steady state hits the per-scene mapping cache every request."""
     from repro.data.synthetic import point_cloud_batch
+    from repro.serve.buckets import BucketLadder
     from repro.serve.engine import PointCloudEngine
 
     params = MU.mini_minkunet_init(jax.random.key(2), c_in=4, n_classes=2)
-    engine = PointCloudEngine(params, n_stages=2, flow="fod")
     base_per_scene = None
     for bsz in batch_sizes:
+        # single exact-fit bucket: measures batching, not padding
+        engine = PointCloudEngine(params, n_stages=2, flow="fod",
+                                  ladder=BucketLadder((n_points,)),
+                                  max_batch=bsz, mesh=None)
         coords, mask, feats, _ = point_cloud_batch(
             seed=1, step=0, batch=bsz, n_points=n_points)
         coords = coords.reshape(bsz, n_points, 4)
         mask = mask.reshape(bsz, n_points)
         feats = feats.reshape(bsz, n_points, -1)
-        levels, _ = engine.levels_for(coords, mask, batched=True)
 
-        def serve(f, levels=levels, c=coords, m=mask):
-            return engine.segment_batch(c, m, f, levels=levels)[0]
+        def serve(f, c=coords, m=mask):
+            return engine.segment_batch(c, m, f)[0]
 
-        us = timeit(serve, jnp.asarray(feats))
+        us = timeit(serve, feats)
         per_scene = us / bsz
         if base_per_scene is None:
             base_per_scene = per_scene
         emit(f"models/minkunet_serve_batch{bsz}", us,
              f"per_scene_us={per_scene:.0f};scenes={bsz};"
              f"scaling_vs_b1={base_per_scene / per_scene:.2f}x")
+
+
+def bench_mixed_serving(n_scenes=16, n_base=512):
+    """Continuous-batching rows: a heterogeneous stream (4 distinct point
+    counts) through `ServeScheduler` — bucketed capacities bound the
+    compile count while padding overhead, mapping-cache hit rate, and
+    per-bucket occupancy land in BENCH_models.json."""
+    from repro.data.synthetic import lidar_scene
+    from repro.serve.buckets import geometric_ladder
+    from repro.serve.engine import PointCloudEngine
+
+    params = MU.mini_minkunet_init(jax.random.key(3), c_in=4, n_classes=2)
+    sizes = [int(n_base * s) for s in (0.375, 0.625, 0.875, 1.375)]
+    engine = PointCloudEngine(
+        params, n_stages=2, flow="fod",
+        ladder=geometric_ladder(n_base // 2, 2 * n_base),
+        max_batch=4, mesh=None)
+    sched = engine.scheduler()
+    scenes = [lidar_scene(seed=11 + i % 8, n_points=sizes[i % 4], grid=32)
+              for i in range(n_scenes)]
+
+    def stream():
+        for c, m, f in scenes:
+            sched.submit(c, f, m)
+        sched.flush()
+        return len(sched.drain())
+
+    us = timeit(stream, warmup=1, iters=3)
+    s = sched.stats()
+    occ = ";".join(f"occ{cap}={b['occupancy']:.2f}"
+                   for cap, b in sorted(s["buckets"].items()))
+    emit("models/minkunet_serve_mixed", us / n_scenes,
+         f"scenes={n_scenes};sizes={len(set(sizes))};"
+         f"padding_overhead={s['padding_overhead']:.2f};"
+         f"map_hit_rate={s['mapping_cache']['hit_rate']:.2f};"
+         f"compiles_apply={s['compiles']['apply_batch']};"
+         f"buckets={len(s['buckets'])};{occ}")
 
 
 def main(argv=None):
@@ -147,6 +188,7 @@ def main(argv=None):
     bench_minknet(*((1024, 32) if args.smoke else (2048, 48)))
     sizes = [int(b) for b in args.batch.split(",") if b]
     bench_batched_serving(sizes, n_points=256 if args.smoke else 512)
+    bench_mixed_serving(n_scenes=16, n_base=256 if args.smoke else 512)
 
 
 if __name__ == "__main__":

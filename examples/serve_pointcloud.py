@@ -1,87 +1,106 @@
 """End-to-end driver (the paper's kind is an inference accelerator):
-serve batched point-cloud segmentation requests through Mini-MinkowskiUNet.
+serve a heterogeneous stream of point-cloud segmentation requests through
+Mini-MinkowskiUNet via the continuous-batching `ServeScheduler`.
 
-Simulates a LiDAR stream: batches of synthetic scenes arrive and are served
-through `repro.serve.engine.PointCloudEngine` — the `PointAccSession`
-frontend plus a `jax.vmap`-over-scenes entry point, so one compiled
-program segments the whole batch.  Per-batch latency + throughput are
-reported, the software analogue of the paper's Fig. 16 deployment.
+Simulates a LiDAR stream with *varying point counts per scene* — the
+realistic serving shape.  Each scene is admitted into the scheduler,
+padded up to its capacity bucket (`serve.buckets.BucketLadder`), grouped
+with bucket peers into fixed-shape micro-batches, and executed on the
+engine's vmapped path (shard_map-sharded over a scene-axis mesh when the
+host has several devices).  Compilations are bounded by the number of
+buckets, not the number of distinct scene sizes; results drain
+out-of-order with per-request latency + padding telemetry.
 
 The Mapping Unit output (the ranked SortedCloud + every level's kernel
-maps) depends only on the coordinates, not the features, so repeated
-geometry — a parked scanner, multi-sweep aggregation, re-scored frames —
-is served from the session's LRU digest-keyed MappingCache: one cheap
-blake2b over the coordinate bytes decides whether the ranking sort +
-binary searches run at all.
+maps) depends only on the coordinates, so repeated geometry — a parked
+scanner, multi-sweep aggregation, re-scored frames — is served from the
+session's LRU digest-keyed MappingCache, per scene: batch composition can
+change around a repeated scene and it still hits.
 
-Run:  PYTHONPATH=src python examples/serve_pointcloud.py [--batches 8]
-      [--distinct-scenes 2] [--flow fod] [--scenes 4]
+Run:  PYTHONPATH=src python examples/serve_pointcloud.py [--scenes 16]
+      [--distinct-scenes 8] [--flow fod] [--max-batch 4]
+      [--metrics-json serve_metrics.json]
 """
 
 import argparse
-import time
+import json
 
 import numpy as np
 import jax
 
-from repro.data.synthetic import point_cloud_batch
+from repro.data.synthetic import lidar_scene
 from repro.models import minkunet as MU
+from repro.serve.buckets import geometric_ladder
 from repro.serve.engine import PointCloudEngine
+from repro.serve.scheduler import ServeScheduler
 
-N_POINTS = 1024
 N_STAGES = 2
+SIZE_CYCLE = (384, 640, 900, 1400)     # heterogeneous point counts
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--batches", type=int, default=8)
-    ap.add_argument("--distinct-scenes", type=int, default=2,
-                    help="geometry repeats every N batches (cache hits)")
+    ap.add_argument("--scenes", type=int, default=16,
+                    help="total scenes pushed through the scheduler")
+    ap.add_argument("--distinct-scenes", type=int, default=8,
+                    help="geometry repeats every N scenes (cache hits)")
     ap.add_argument("--flow", default="fod",
                     choices=["fod", "gms", "pallas", "pallas_fused"])
-    ap.add_argument("--scenes", type=int, default=4,
-                    help="scenes per batch (the vmapped axis)")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="scenes per micro-batch (the vmapped axis)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="dump scheduler stats() as JSON (CI artifact)")
     args = ap.parse_args()
 
     params = MU.mini_minkunet_init(jax.random.key(0), c_in=4, n_classes=2)
-    engine = PointCloudEngine(params, N_STAGES, flow=args.flow)
+    engine = PointCloudEngine(params, N_STAGES, flow=args.flow,
+                              ladder=geometric_ladder(512, 2048),
+                              max_batch=args.max_batch)
+    sched = engine.scheduler()
 
-    lat, map_ms, n_pts = [], [], 0
-    for b in range(args.batches):
-        coords, mask, feats, labels = point_cloud_batch(
-            seed=1, step=b % args.distinct_scenes, batch=args.scenes,
-            n_points=N_POINTS)
-        # per-scene arrays for the vmapped entry point
-        coords = coords.reshape(args.scenes, N_POINTS, 4)
-        mask = mask.reshape(args.scenes, N_POINTS)
-        feats = feats.reshape(args.scenes, N_POINTS, -1)
-        labels = labels.reshape(args.scenes, N_POINTS)
+    scenes = {}
+    for i in range(args.scenes):
+        gen = i % args.distinct_scenes
+        n = SIZE_CYCLE[gen % len(SIZE_CYCLE)]
+        coords, mask, feats = lidar_scene(seed=7 + gen, n_points=n, grid=48)
+        labels = (coords[:, 3] > 0).astype(np.int32)
+        labels[~mask] = 0
+        rid = sched.submit(coords, feats, mask)
+        scenes[rid] = (mask, labels)
+    sched.flush()
 
-        t0 = time.perf_counter()
-        levels, hit = engine.levels_for(coords, mask, batched=True)
-        t1 = time.perf_counter()
-        pred, _ = engine.segment_batch(coords, mask, feats, levels=levels)
-        pred = np.asarray(pred)
-        dt = time.perf_counter() - t0
-        acc = (pred[mask] == labels[mask]).mean()
-        if b >= args.distinct_scenes:  # skip compile + first-sight batches
-            lat.append(dt)
-            map_ms.append((t1 - t0) * 1e3)
-            n_pts += int(mask.sum())
-        print(f"batch {b}: {args.scenes} scenes, "
-              f"{int(mask.sum())} points, {dt * 1e3:.1f} ms "
-              f"(mapping {'hit' if hit else 'miss'}"
-              f" {(t1 - t0) * 1e3:.2f} ms), untrained-acc {acc:.2f}")
+    results = sched.drain()
+    print(f"drained {len(results)} results "
+          f"(completion order: {[r.rid for r in results]})")
+    for r in results:
+        mask, labels = scenes[r.rid]
+        acc = (r.preds[mask] == labels[mask]).mean()
+        print(f"  req {r.rid:2d}: {r.n_points:5d} pts -> bucket "
+              f"{r.bucket:5d} (padding {r.padding_frac * 100:4.1f}%), "
+              f"mapping {'hit ' if r.mapping_hit else 'miss'}, "
+              f"latency {r.latency_s * 1e3:7.1f} ms, "
+              f"untrained-acc {acc:.2f}")
 
-    if lat:
-        stats = engine.cache_stats()
-        print(f"\nsteady-state: {np.mean(lat) * 1e3:.1f} ms/batch, "
-              f"{n_pts / sum(lat):.0f} points/s "
-              f"({args.scenes / np.mean(lat):.1f} scenes/s); "
-              f"mapping cache {stats['hits']} hits / "
-              f"{stats['misses']} misses "
-              f"({stats['entries']}/{stats['max_entries']} entries), "
-              f"{np.mean(map_ms):.2f} ms/batch on mapping")
+    stats = sched.stats()
+    mc = stats["mapping_cache"]
+    print(f"\nserved {stats['n_completed']}/{stats['n_submitted']} scenes "
+          f"on {stats['n_devices']} device(s), max_batch "
+          f"{stats['max_batch']}: padding overhead "
+          f"{stats['padding_overhead'] * 100:.1f}%, mapping cache "
+          f"{mc['hits']} hits / {mc['misses']} misses "
+          f"(hit rate {mc['hit_rate'] * 100:.0f}%), compiles "
+          f"{stats['compiles']}, mean latency "
+          f"{stats['latency_avg_s'] * 1e3:.1f} ms")
+    for cap, b in sorted(stats["buckets"].items()):
+        print(f"  bucket {cap:5d}: {b['scenes']} scenes in "
+              f"{b['batches']} micro-batches "
+              f"(occupancy {b['occupancy'] * 100:.0f}%, "
+              f"{b['dummy_scenes']} dummy fills)")
+
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(stats, f, indent=2, sort_keys=True)
+        print(f"wrote scheduler metrics to {args.metrics_json}")
 
 
 if __name__ == "__main__":

@@ -95,18 +95,26 @@ class MappingCache:
         self.misses = 0
 
     @staticmethod
-    def digest(arrays) -> bytes:
+    def digest(arrays, extra=None) -> bytes:
+        """Digest of the geometry bytes; `extra` (any repr-able static
+        metadata — bucket capacity, entry-point tag, ladder id) is folded
+        into the key so the same coordinates padded into different
+        serving buckets, or cached by different entry points, never
+        collide."""
         h = hashlib.blake2b(digest_size=16)
+        if extra is not None:
+            h.update(repr(extra).encode())
         for a in arrays:
             a = np.asarray(a)
             h.update(str((a.shape, a.dtype)).encode())
             h.update(a.tobytes())
         return h.digest()
 
-    def get(self, key_arrays, build: Callable[[], Any]):
-        """(value, hit) for the geometry identified by `key_arrays`;
+    def get(self, key_arrays, build: Callable[[], Any], extra=None):
+        """(value, hit) for the geometry identified by `key_arrays` (+
+        optional static `extra` metadata, e.g. the serving bucket);
         `build()` runs only on a miss."""
-        key = self.digest(key_arrays)
+        key = self.digest(key_arrays, extra)
         if key in self._store:
             self.hits += 1
             self._store.move_to_end(key)
@@ -121,8 +129,14 @@ class MappingCache:
     def __len__(self) -> int:
         return len(self._store)
 
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
+                "hit_rate": self.hit_rate,
                 "entries": len(self._store),
                 "max_entries": self.max_entries}
 

@@ -219,6 +219,34 @@ class SparseTensor:
         """Same geometry (and context), new features."""
         return dataclasses.replace(self, feats=feats)
 
+    def padded_to(self, capacity: int) -> "SparseTensor":
+        """Row-pad the tensor up to a serving-bucket capacity.
+
+        Padding rows carry SENTINEL coordinates, a False mask and zero
+        features, so they sort to the end of the ranking structure and
+        never enter a kernel map — valid-row outputs are unchanged.  The
+        padded tensor starts a fresh MapContext (same engine/cap policy):
+        cached maps are capacity-shaped and cannot be reused.
+        """
+        if capacity < self.capacity:
+            raise ValueError(
+                f"cannot pad a capacity-{self.capacity} tensor down to "
+                f"{capacity}; buckets only grow")
+        if capacity == self.capacity:
+            return self
+        pad = capacity - self.capacity
+        coords = jnp.concatenate(
+            [self.coords,
+             jnp.full((pad, self.coords.shape[1]), M.SENTINEL, jnp.int32)])
+        mask = jnp.concatenate([self.mask, jnp.zeros(pad, bool)])
+        feats = jnp.concatenate(
+            [self.feats, jnp.zeros((pad,) + self.feats.shape[1:],
+                                   self.feats.dtype)])
+        ctx = MapContext(engine=self.context.engine, cap=self.context.cap)
+        pc = M.PointCloud(coords, mask, self.stride)
+        ctx.register_cloud(self.stride, pc)
+        return SparseTensor(feats, coords, mask, self.stride, ctx)
+
 
 def from_point_cloud(pc: M.PointCloud, feats: jnp.ndarray,
                      context: MapContext | None = None) -> SparseTensor:

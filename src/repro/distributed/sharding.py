@@ -269,3 +269,43 @@ def state_specs(state_shapes, sc: ShardingConfig):
 
 def replicated(sc: ShardingConfig):
     return NamedSharding(sc.mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# scene-axis serving rules (continuous-batching point-cloud scheduler)
+# ---------------------------------------------------------------------------
+
+def make_scene_mesh(axis: str = "scene", devices=None) -> Optional[Mesh]:
+    """1-D mesh over the host's devices for scene-parallel serving.
+
+    Returns None on a single-device host — the serve scheduler treats
+    that as "run the vmapped path directly" (no shard_map), so the same
+    code degrades to single-device CPU without changes.
+    """
+    devs = list(devices) if devices is not None else jax.devices()
+    if len(devs) < 2:
+        return None
+    return Mesh(np.asarray(devs), (axis,))
+
+
+def shard_over_scenes(fn, mesh: Mesh, axis: str = "scene"):
+    """shard_map a vmapped batch function over its leading scene axis.
+
+    `fn(*args) -> out` must take arrays / pytrees whose every leaf is
+    batched along axis 0 (the scene axis) and return leaves batched the
+    same way; each device runs `fn` on its local B/n_devices scenes.
+    The scene axis of every argument must be divisible by the mesh size —
+    the scheduler guarantees this by padding micro-batches to a fixed
+    scene count that is a multiple of the device count.
+    """
+    from repro import compat
+
+    spec = P(axis)
+
+    def sharded(*args):
+        body = compat.shard_map(fn, mesh=mesh,
+                                in_specs=tuple(spec for _ in args),
+                                out_specs=spec, axis_names={axis})
+        return body(*args)
+
+    return sharded

@@ -86,8 +86,8 @@ def main(argv=None):
     from repro.launch.shapes import (SHAPES, cell_supported,
                                      decode_state_specs, input_specs)
     from repro.models import registry
-    from repro.serve.engine import (ServeConfig, make_decode_step,
-                                    make_prefill_step)
+    from repro.serve.lm import (ServeConfig, make_decode_step,
+                                make_prefill_step)
     from repro.train import optim as OPT
     from repro.train.step import TrainConfig, make_train_step
 

@@ -1,0 +1,114 @@
+"""Capacity-bucket policy for continuous batching of point-cloud scenes.
+
+Real LiDAR streams have heterogeneous point counts; a jit'd serving path
+recompiles for every distinct capacity it sees.  The classic fix (the
+TorchSparse "adaptive grouping" observation, applied to shapes instead of
+workloads) is a *bucket ladder*: a small geometric set of capacities every
+scene is padded up to, so the number of compiled programs is bounded by
+the number of buckets — not by the number of distinct scene sizes — while
+the padding overhead per scene is bounded by the ladder's growth factor.
+
+`BucketLadder` is pure policy (no jax); `pad_scene` is the mechanism: pad
+rows up to the bucket capacity with SENTINEL coordinates and a False
+mask, which the mapping engine already treats as "not a point" (sentinel
+keys sort to the end and never match), so a padded scene produces
+bit-compatible mapping work and numerically identical valid-row outputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core import mapping as M
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketLadder:
+    """An ascending tuple of scene capacities (the compile-shape budget)."""
+
+    capacities: tuple[int, ...]
+
+    def __post_init__(self):
+        caps = tuple(int(c) for c in self.capacities)
+        if not caps or any(c <= 0 for c in caps):
+            raise ValueError("BucketLadder needs positive capacities, got "
+                             f"{self.capacities}")
+        if list(caps) != sorted(set(caps)):
+            raise ValueError("BucketLadder capacities must be strictly "
+                             f"ascending, got {self.capacities}")
+        object.__setattr__(self, "capacities", caps)
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.capacities)
+
+    def index_for(self, n_points: int) -> int:
+        """Index of the smallest bucket holding an n_points-row scene."""
+        for i, cap in enumerate(self.capacities):
+            if n_points <= cap:
+                return i
+        raise ValueError(
+            f"scene with {n_points} points exceeds the bucket ladder "
+            f"(max capacity {self.capacities[-1]}); extend the ladder")
+
+    def bucket_for(self, n_points: int) -> int:
+        """Capacity of the smallest bucket holding the scene."""
+        return self.capacities[self.index_for(n_points)]
+
+    def padding_fraction(self, n_points: int) -> float:
+        """Wasted fraction of the bucket a scene of n_points rows pays."""
+        cap = self.bucket_for(n_points)
+        return 1.0 - n_points / cap
+
+
+def geometric_ladder(min_capacity: int = 128, max_capacity: int = 65536,
+                     growth: float = 2.0) -> BucketLadder:
+    """Geometric capacity ladder: worst-case padding = 1 - 1/growth.
+
+    Capacities are rounded up to multiples of 8 so downstream tiled
+    kernels never see ragged row counts.
+    """
+    if growth <= 1.0:
+        raise ValueError(f"ladder growth must be > 1, got {growth}")
+    caps, c = [], float(min_capacity)
+    while True:
+        cap = int(8 * math.ceil(c / 8))
+        if not caps or cap > caps[-1]:
+            caps.append(cap)
+        if cap >= max_capacity:
+            break
+        c *= growth
+    return BucketLadder(tuple(caps))
+
+
+DEFAULT_LADDER = geometric_ladder()
+
+
+def pad_scene(coords, mask, feats, capacity: int):
+    """Pad one scene's (coords, mask, feats) rows up to `capacity`.
+
+    Invalid rows (padding AND pre-existing masked rows) get SENTINEL
+    coordinates and zero features, matching `mapping.make_point_cloud`
+    normalisation, so the padded scene maps and convolves identically to
+    the original on its valid rows.  Host-side numpy: padding happens at
+    admission time, before arrays are stacked and shipped to the device.
+    """
+    coords = np.asarray(coords)
+    mask = np.asarray(mask, bool)
+    n = coords.shape[0]
+    if capacity < n:
+        raise ValueError(f"cannot pad a {n}-row scene down to {capacity}")
+    out_c = np.full((capacity, coords.shape[1]), M.SENTINEL, np.int32)
+    out_c[:n] = np.where(mask[:, None], coords.astype(np.int32), M.SENTINEL)
+    out_m = np.zeros(capacity, bool)
+    out_m[:n] = mask
+    if feats is None:
+        return out_c, out_m, None
+    feats = np.asarray(feats)
+    out_f = np.zeros((capacity,) + feats.shape[1:], feats.dtype)
+    out_f[:n] = np.where(mask.reshape((n,) + (1,) * (feats.ndim - 1)),
+                         feats, 0)
+    return out_c, out_m, out_f

@@ -1,155 +1,70 @@
-"""Batched serving engines.
+"""Point-cloud serving engine: the model-side half of the serving stack.
 
-`prefill_step` / `decode_step` are the jit-able pure functions the dry-run
-lowers for the decode_* / long_* shapes.  `ServeEngine` drives them for the
-runnable examples: static-batch greedy generation with slot bookkeeping
-(a continuous-batching slot refill hook is provided but refills re-run
-prefill on the whole slot batch — documented trade-off for simplicity).
+`PointCloudEngine` fronts a `PointAccSession` (flow/engine policy + the
+LRU digest-keyed `MappingCache`) with jit'd entry points for
+MinkUNet-style segmentation, and — since the continuous-batching PR —
+routes EVERY entry point through a capacity `BucketLadder`
+(`serve.buckets`): scenes are padded up to a small geometric set of
+capacities, so the jit cache holds at most one program per bucket per
+entry point instead of one per distinct point count.
 
-`PointCloudEngine` is the sparse point-cloud counterpart: it fronts a
-`PointAccSession` (flow/engine policy + the LRU digest-keyed MappingCache)
-with jit'd single-scene and `jax.vmap`-over-scenes entry points for
-MinkUNet-style segmentation serving.
+  * `segment(coords, mask, feats)` — one scene; padded to its bucket,
+    level pyramid served from the per-scene mapping cache, predictions
+    un-padded back to the caller's row count.
+  * `segment_batch(coords, mask, feats)` — (B, N, ...) per-scene arrays,
+    served through an internal `serve.scheduler.ServeScheduler`: the
+    scenes are admitted, grouped into fixed-shape micro-batches,
+    executed on the vmapped (and, multi-device, shard_map-sharded) path,
+    and reassembled in submission order.
+  * `levels_for(coords, mask)` — the cached Mapping-Unit pass alone; the
+    batched form stacks per-scene cached pyramids, so a batch whose
+    composition changes still hits the cache scene by scene.
+
+The Mapping Unit output depends only on coordinates, so repeated geometry
+(parked scanner, multi-sweep aggregation, re-scored frames) skips the
+ranking sort + binary searches entirely on a cache hit.
+
+The token-LM serving engine (`ServeEngine` and friends) lives in
+`repro.serve.lm`.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import nn
 from repro.api import PointAccSession
 from repro.core import mapping as M
-from repro.distributed import sharding as SH
 from repro.models import minkunet as MU
-from repro.models.registry import Model
+from repro.serve import buckets as BK
 
-
-@dataclasses.dataclass(frozen=True)
-class ServeConfig:
-    max_len: int = 1024
-    cache_dtype: Any = jnp.bfloat16
-    compute_dtype: Any = jnp.bfloat16
-    greedy: bool = True
-    temperature: float = 1.0
-
-
-def make_prefill_step(model: Model, svc: ServeConfig,
-                      sc: Optional[SH.ShardingConfig] = None):
-    shard = SH.make_shard_fn(sc) if sc is not None else \
-        (lambda x, names: x)
-    mesh = sc.mesh if sc is not None else None
-
-    def prefill_step(params, batch):
-        cparams = nn.cast_floating(params, svc.compute_dtype)
-        logits, states, _ = model.prefill(cparams, batch, shard=shard,
-                                          mesh=mesh)
-        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        return next_tok, states
-
-    return prefill_step
-
-
-def make_decode_step(model: Model, svc: ServeConfig,
-                     sc: Optional[SH.ShardingConfig] = None):
-    shard = SH.make_shard_fn(sc) if sc is not None else \
-        (lambda x, names: x)
-    mesh = sc.mesh if sc is not None else None
-
-    def decode_step(params, states, batch):
-        cparams = nn.cast_floating(params, svc.compute_dtype)
-        logits, states, _ = model.decode(cparams, batch, states,
-                                         shard=shard, mesh=mesh)
-        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        return next_tok, states
-
-    return decode_step
-
-
-class ServeEngine:
-    """Greedy batched generation over fixed slots."""
-
-    def __init__(self, model: Model, params, svc: ServeConfig,
-                 sc: Optional[SH.ShardingConfig] = None):
-        self.model = model
-        self.params = params
-        self.svc = svc
-        self.prefill_step = jax.jit(make_prefill_step(model, svc, sc))
-        self.decode_step = jax.jit(make_decode_step(model, svc, sc),
-                                   donate_argnums=(1,))
-
-    def generate(self, prompts: np.ndarray, max_new_tokens: int,
-                 eos_id: int = -1) -> np.ndarray:
-        """prompts (B, S) int32 -> generated ids (B, max_new_tokens)."""
-        b, s = prompts.shape
-        cfg = self.model.cfg
-        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
-        batch = {"tokens": jnp.asarray(prompts), "positions": positions}
-        tok, pre_states = self.prefill_step(self.params, batch)
-
-        # place prefill states into max_len decode buffers
-        init = self.model.init_state(b, self.svc.max_len,
-                                     self.svc.cache_dtype)
-
-        def place(dst, src):
-            src = src.astype(dst.dtype)
-            if src.shape == dst.shape:
-                return src
-            pad = [(0, d - s_) for d, s_ in zip(dst.shape, src.shape)]
-            return jnp.pad(src, pad)
-
-        states = jax.tree_util.tree_map(place, init, pre_states)
-
-        out = np.zeros((b, max_new_tokens), np.int32)
-        done = np.zeros(b, bool)
-        pos = s
-        for t in range(max_new_tokens):
-            out[:, t] = np.asarray(tok)
-            done |= np.asarray(tok) == eos_id
-            if done.all():
-                break
-            dec_batch = {
-                "tokens": tok[:, None],
-                "positions": jnp.full((b, 1), pos, jnp.int32),
-                "cache_pos": jnp.full((b,), pos, jnp.int32),
-            }
-            tok, states = self.decode_step(self.params, states, dec_batch)
-            pos += 1
-        return out
-
-
-# ---------------------------------------------------------------------------
-# sparse point-cloud serving (PointAcc)
-# ---------------------------------------------------------------------------
 
 class PointCloudEngine:
     """Serving frontend for MinkUNet-style sparse segmentation models.
 
-    Owns a `PointAccSession` — the flow/engine policy plus the LRU-bounded
-    digest-keyed `MappingCache` — and two jit'd entry points:
-
-      * `segment(coords, mask, feats)` — one flattened cloud per request
-        (scenes distinguished by the batch column, the PR-2 serving shape);
-      * `segment_batch(coords, mask, feats)` — (B, N, ...) per-scene
-        arrays, `jax.vmap` over scenes: one compiled program serves the
-        whole batch, per-scene map pyramids are built by a vmapped Mapping
-        Unit pass and cached across requests by the geometry digest.
-
-    The Mapping Unit output depends only on coordinates, so repeated
-    geometry (parked scanner, multi-sweep aggregation, re-scored frames)
-    skips the ranking sort + binary searches entirely on a cache hit.
+    Owns the `PointAccSession` (policy + MappingCache), the bucket
+    ladder, and the jit'd single-scene / vmapped-batch entry points the
+    `ServeScheduler` executes through.  `max_batch` / `mesh` configure
+    the internal scheduler behind `segment_batch` (mesh="auto" shards
+    over the host's devices when there are several; single-device hosts
+    run the plain vmapped path).
     """
 
     def __init__(self, params, n_stages: int, flow: str = "fod",
-                 engine: Optional[str] = None, cache_entries: int = 32):
+                 engine: Optional[str] = None, cache_entries: int = 32,
+                 ladder: Optional[BK.BucketLadder] = None,
+                 max_batch: int = 4, mesh="auto"):
         self.session = PointAccSession(flow=flow, engine=engine,
                                        cache_entries=cache_entries)
         self.params = params
         self.n_stages = n_stages
+        self.ladder = ladder if ladder is not None else BK.DEFAULT_LADDER
+        self._max_batch = max_batch
+        self._mesh = mesh
+        self._scheduler = None
 
         def build_one(coords, mask):
             return MU.build_unet_maps(M.PointCloud(coords, mask, 1),
@@ -162,38 +77,121 @@ class PointCloudEngine:
             return jnp.argmax(logits, -1)
 
         self._build = jax.jit(build_one)
-        self._build_batch = jax.jit(jax.vmap(build_one))
         self._apply = jax.jit(apply_one)
-        self._apply_batch = jax.jit(jax.vmap(apply_one))
+        self._apply_batch_fn = jax.vmap(apply_one)
+        self._apply_batch = jax.jit(self._apply_batch_fn)
 
-    def levels_for(self, coords, mask, batched: bool = False):
-        """(level pyramid, cache_hit) for a geometry; builds on miss."""
-        build = self._build_batch if batched else self._build
+    # -- scheduler hookup -------------------------------------------------
+
+    def scheduler(self):
+        """The engine's lazily-built default `ServeScheduler` (the one
+        `segment_batch` serves through); build your own for a different
+        max_batch / mesh."""
+        if self._scheduler is None:
+            from repro.serve.scheduler import ServeScheduler
+            self._scheduler = ServeScheduler(self, max_batch=self._max_batch,
+                                             mesh=self._mesh)
+        return self._scheduler
+
+    # -- mapping ----------------------------------------------------------
+
+    def _levels_padded(self, coords, mask, bucket: int):
+        """(levels, hit) for ONE already-padded scene; cached per scene
+        with a bucket-aware key."""
+        coords = np.asarray(coords)
+        mask = np.asarray(mask)
         return self.session.maps_cache.get(
             (coords, mask),
             lambda: jax.block_until_ready(
-                build(jnp.asarray(coords), jnp.asarray(mask))))
+                self._build(jnp.asarray(coords), jnp.asarray(mask))),
+            extra=("levels", int(bucket)))
+
+    def _scene_levels(self, coords, mask):
+        """(levels, hit, bucket) for one raw scene: pad to its bucket,
+        then the cached build."""
+        cap = self.ladder.bucket_for(np.asarray(coords).shape[0])
+        c, m, _ = BK.pad_scene(coords, mask, None, cap)
+        levels, hit = self._levels_padded(c, m, cap)
+        return levels, hit, cap
+
+    def levels_for(self, coords, mask, batched: bool = False):
+        """(level pyramid, cache_hit) for a geometry; builds on miss.
+
+        Every pyramid is built at the scene's BUCKET capacity (pass the
+        same arrays to `segment`, which pads identically).  The batched
+        form builds/caches per scene and stacks, so the hit flag is True
+        only when every scene hit; changing the batch composition around
+        a repeated scene still reuses that scene's pyramid.
+        """
+        if not batched:
+            levels, hit, _ = self._scene_levels(coords, mask)
+            return levels, hit
+        coords = np.asarray(coords)
+        mask = np.asarray(mask)
+        per_scene = [self._scene_levels(coords[b], mask[b])
+                     for b in range(coords.shape[0])]
+        levels = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[lv for lv, _, _ in per_scene])
+        return levels, all(hit for _, hit, _ in per_scene)
+
+    # -- serving entry points ---------------------------------------------
 
     def segment(self, coords, mask, feats, levels=None):
-        """One flattened cloud -> (per-point class ids, mapping_cache_hit).
+        """One scene -> (per-point class ids, mapping_cache_hit).
 
-        Pass `levels` (from `levels_for`) to skip the cache lookup; the
-        returned hit flag is then None."""
+        The scene is padded to its ladder bucket before the jit'd apply
+        (bounding retraces to one per bucket) and predictions are sliced
+        back to the caller's row count.  Pass `levels` (from
+        `levels_for`, built at the same bucket) to skip the cache lookup;
+        the returned hit flag is then None.
+        """
+        n = np.asarray(coords).shape[0]
+        cap = self.ladder.bucket_for(n)
+        c, m, f = BK.pad_scene(coords, mask, feats, cap)
         hit = None
         if levels is None:
-            levels, hit = self.levels_for(coords, mask)
-        preds = self._apply(levels, jnp.asarray(coords), jnp.asarray(mask),
-                            jnp.asarray(feats))
-        return preds, hit
+            levels, hit = self._levels_padded(c, m, cap)
+        preds = self._apply(levels, jnp.asarray(c), jnp.asarray(m),
+                            jnp.asarray(f))
+        return preds[:n], hit
 
-    def segment_batch(self, coords, mask, feats, levels=None):
-        """(B, N, 1+D) scenes -> ((B, N) class ids, mapping_cache_hit)."""
-        hit = None
-        if levels is None:
-            levels, hit = self.levels_for(coords, mask, batched=True)
-        preds = self._apply_batch(levels, jnp.asarray(coords),
-                                  jnp.asarray(mask), jnp.asarray(feats))
-        return preds, hit
+    def segment_batch(self, coords, mask, feats):
+        """(B, N, 1+D) scenes -> ((B, N) class ids, mapping_cache_hit).
+
+        Served through the internal `ServeScheduler`: each scene is
+        admitted, micro-batched with its bucket peers, executed on the
+        vmapped (multi-device: shard_map-sharded) path, and results are
+        reassembled in submission order.  The hit flag is True only when
+        every scene's pyramid came from the mapping cache.
+
+        The scheduler is shared (`self.scheduler()`): scenes another
+        caller queued are flushed along with this batch, but their
+        results stay drainable — only this call's requests are taken.
+        """
+        coords = np.asarray(coords)
+        mask = np.asarray(mask)
+        feats = np.asarray(feats)
+        # stacked scenes share N: one ladder check up front, so an
+        # overflow raises before any scene is admitted
+        self.ladder.bucket_for(coords.shape[1])
+        sched = self.scheduler()
+        rids = [sched.submit(coords[b], feats[b], mask[b])
+                for b in range(coords.shape[0])]
+        sched.flush()
+        by_rid = sched.take(rids)
+        preds = np.stack([by_rid[rid].preds for rid in rids])
+        hit = all(by_rid[rid].mapping_hit for rid in rids)
+        return jnp.asarray(preds), hit
+
+    # -- telemetry --------------------------------------------------------
 
     def cache_stats(self) -> dict:
         return self.session.cache_stats()
+
+    def compile_stats(self) -> dict:
+        """jit-cache sizes of the engine's entry points — bounded by the
+        number of ladder buckets actually seen (asserted in tier-1)."""
+        from repro.serve.scheduler import _jit_cache_size
+        return {"build": _jit_cache_size(self._build),
+                "apply": _jit_cache_size(self._apply),
+                "apply_batch": _jit_cache_size(self._apply_batch)}

@@ -1,0 +1,117 @@
+"""Token-LM serving engine (the non-point-cloud half of `repro.serve`).
+
+`prefill_step` / `decode_step` are the jit-able pure functions the dry-run
+lowers for the decode_* / long_* shapes.  `ServeEngine` drives them for the
+runnable examples: static-batch greedy generation with slot bookkeeping
+(a continuous-batching slot refill hook is provided but refills re-run
+prefill on the whole slot batch — documented trade-off for simplicity).
+
+This lives apart from `serve.engine` (the PointAcc point-cloud serving
+stack) on purpose: the two share nothing but the word "serve".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import nn
+from repro.distributed import sharding as SH
+from repro.models.registry import Model
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int = 1024
+    cache_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+    greedy: bool = True
+    temperature: float = 1.0
+
+
+def make_prefill_step(model: Model, svc: ServeConfig,
+                      sc: Optional[SH.ShardingConfig] = None):
+    shard = SH.make_shard_fn(sc) if sc is not None else \
+        (lambda x, names: x)
+    mesh = sc.mesh if sc is not None else None
+
+    def prefill_step(params, batch):
+        cparams = nn.cast_floating(params, svc.compute_dtype)
+        logits, states, _ = model.prefill(cparams, batch, shard=shard,
+                                          mesh=mesh)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, states
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, svc: ServeConfig,
+                     sc: Optional[SH.ShardingConfig] = None):
+    shard = SH.make_shard_fn(sc) if sc is not None else \
+        (lambda x, names: x)
+    mesh = sc.mesh if sc is not None else None
+
+    def decode_step(params, states, batch):
+        cparams = nn.cast_floating(params, svc.compute_dtype)
+        logits, states, _ = model.decode(cparams, batch, states,
+                                         shard=shard, mesh=mesh)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, states
+
+    return decode_step
+
+
+class ServeEngine:
+    """Greedy batched generation over fixed slots."""
+
+    def __init__(self, model: Model, params, svc: ServeConfig,
+                 sc: Optional[SH.ShardingConfig] = None):
+        self.model = model
+        self.params = params
+        self.svc = svc
+        self.prefill_step = jax.jit(make_prefill_step(model, svc, sc))
+        self.decode_step = jax.jit(make_decode_step(model, svc, sc),
+                                   donate_argnums=(1,))
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 eos_id: int = -1) -> np.ndarray:
+        """prompts (B, S) int32 -> generated ids (B, max_new_tokens)."""
+        b, s = prompts.shape
+        cfg = self.model.cfg
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        batch = {"tokens": jnp.asarray(prompts), "positions": positions}
+        tok, pre_states = self.prefill_step(self.params, batch)
+
+        # place prefill states into max_len decode buffers
+        init = self.model.init_state(b, self.svc.max_len,
+                                     self.svc.cache_dtype)
+
+        def place(dst, src):
+            src = src.astype(dst.dtype)
+            if src.shape == dst.shape:
+                return src
+            pad = [(0, d - s_) for d, s_ in zip(dst.shape, src.shape)]
+            return jnp.pad(src, pad)
+
+        states = jax.tree_util.tree_map(place, init, pre_states)
+
+        out = np.zeros((b, max_new_tokens), np.int32)
+        done = np.zeros(b, bool)
+        pos = s
+        for t in range(max_new_tokens):
+            out[:, t] = np.asarray(tok)
+            done |= np.asarray(tok) == eos_id
+            if done.all():
+                break
+            dec_batch = {
+                "tokens": tok[:, None],
+                "positions": jnp.full((b, 1), pos, jnp.int32),
+                "cache_pos": jnp.full((b,), pos, jnp.int32),
+            }
+            tok, states = self.decode_step(self.params, states, dec_batch)
+            pos += 1
+        return out

@@ -1,0 +1,398 @@
+"""Continuous-batching serve scheduler: the bucket ladder (capacities,
+padding, numerical invariance), the ServeScheduler (queueing, bucketed
+micro-batches, out-of-order drain, telemetry), bounded compile counts
+through every engine entry point, and mixed-bucket parity with a
+per-scene loop across the fod / pallas / pallas_fused flows.  The
+shard_map-sharded executor is covered on a mocked multi-device mesh in
+tests/test_distributed.py; here the same code degrades to the
+single-device vmapped path."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.api import MappingCache, PointAccSession
+from repro.core import mapping as M
+from repro.data.synthetic import lidar_scene
+from repro.models import minkunet as MU
+from repro.serve.buckets import (BucketLadder, geometric_ladder,
+                                 pad_scene)
+from repro.serve.engine import PointCloudEngine
+from repro.serve.scheduler import ServeScheduler
+
+
+def _mini_params(n_classes=2):
+    return MU.mini_minkunet_init(jax.random.key(0), c_in=4,
+                                 n_classes=n_classes)
+
+
+def _ref_preds(params, coords, mask, feats, flow="fod"):
+    pc = M.make_point_cloud(jnp.asarray(coords), jnp.asarray(mask))
+    logits = MU.minkunet_apply(params, pc, jnp.asarray(feats), flow=flow)
+    return np.asarray(jnp.argmax(logits, -1))
+
+
+# ---------------------------------------------------------------------------
+# bucket ladder policy
+# ---------------------------------------------------------------------------
+
+def test_bucket_ladder_selection_and_bounds():
+    ladder = BucketLadder((64, 128, 256))
+    assert ladder.n_buckets == 3
+    assert ladder.bucket_for(1) == 64
+    assert ladder.bucket_for(64) == 64
+    assert ladder.bucket_for(65) == 128
+    assert ladder.bucket_for(256) == 256
+    assert ladder.index_for(200) == 2
+    with pytest.raises(ValueError, match="exceeds the bucket ladder"):
+        ladder.bucket_for(257)
+    assert ladder.padding_fraction(96) == pytest.approx(0.25)
+
+
+def test_bucket_ladder_validation():
+    with pytest.raises(ValueError, match="ascending"):
+        BucketLadder((128, 64))
+    with pytest.raises(ValueError, match="ascending"):
+        BucketLadder((64, 64))
+    with pytest.raises(ValueError, match="positive"):
+        BucketLadder((0, 64))
+    with pytest.raises(ValueError, match="growth"):
+        geometric_ladder(64, 256, growth=1.0)
+
+
+def test_geometric_ladder_growth_bounds_padding():
+    ladder = geometric_ladder(128, 4096, growth=2.0)
+    caps = ladder.capacities
+    assert caps[0] == 128 and caps[-1] >= 4096
+    assert all(c % 8 == 0 for c in caps)
+    # worst-case padding of a geometric ladder is 1 - 1/growth
+    for n in range(129, 4096, 97):
+        assert ladder.padding_fraction(n) < 0.5 + 1e-9
+
+
+def test_pad_scene_sentinels_and_masked_rows():
+    rng = np.random.default_rng(0)
+    coords = rng.integers(0, 10, size=(5, 4)).astype(np.int32)
+    mask = np.array([True, True, False, True, True])
+    feats = rng.normal(size=(5, 3)).astype(np.float32)
+    c, m, f = pad_scene(coords, mask, feats, 8)
+    assert c.shape == (8, 4) and m.shape == (8,) and f.shape == (8, 3)
+    np.testing.assert_array_equal(m, list(mask) + [False] * 3)
+    # padding rows AND pre-masked rows are sentinel-filled / zeroed
+    assert (c[5:] == M.SENTINEL).all() and (c[2] == M.SENTINEL).all()
+    assert (f[5:] == 0).all() and (f[2] == 0).all()
+    np.testing.assert_array_equal(c[0], coords[0])
+    with pytest.raises(ValueError, match="pad.*down"):
+        pad_scene(coords, mask, feats, 4)
+    # feats=None path (mapping-only padding)
+    c2, m2, f2 = pad_scene(coords, mask, None, 8)
+    np.testing.assert_array_equal(c2, c)
+    assert f2 is None
+
+
+@pytest.mark.parametrize("flow", ["fod", "pallas_fused"])
+def test_bucket_padding_preserves_logits(flow):
+    """The core invariant the ladder relies on: padding a scene to a
+    bucket capacity leaves the valid rows' logits unchanged (atol 1e-5)
+    — sentinel rows sort to the end and never enter a kernel map."""
+    coords, mask, feats = lidar_scene(3, 72, grid=16)
+    params = _mini_params()
+    session = PointAccSession(flow=flow)
+    x = session.tensor(jnp.asarray(coords), jnp.asarray(mask),
+                       jnp.asarray(feats))
+    ref = MU.minkunet_forward(session, params, x)
+
+    session2 = PointAccSession(flow=flow)
+    xp = session2.tensor(jnp.asarray(coords), jnp.asarray(mask),
+                         jnp.asarray(feats)).padded_to(128)
+    assert xp.capacity == 128
+    out = MU.minkunet_forward(session2, params, xp)
+    np.testing.assert_allclose(np.asarray(out)[:72], np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_padded_to_rejects_shrink_and_is_idempotent():
+    coords, mask, feats = lidar_scene(3, 40, grid=12)
+    session = PointAccSession()
+    x = session.tensor(jnp.asarray(coords), jnp.asarray(mask),
+                       jnp.asarray(feats))
+    assert x.padded_to(40) is x
+    with pytest.raises(ValueError, match="buckets only grow"):
+        x.padded_to(16)
+
+
+# ---------------------------------------------------------------------------
+# bucket-aware MappingCache keys
+# ---------------------------------------------------------------------------
+
+def test_mapping_cache_extra_distinguishes_buckets():
+    cache = MappingCache()
+    a = np.zeros(4, np.int32)
+    assert cache.get((a,), lambda: "b128", extra=("levels", 128)) \
+        == ("b128", False)
+    # same bytes, different bucket metadata -> different entry
+    assert cache.get((a,), lambda: "b256", extra=("levels", 256)) \
+        == ("b256", False)
+    assert cache.get((a,), lambda: None, extra=("levels", 128)) \
+        == ("b128", True)
+    assert MappingCache.digest((a,)) != MappingCache.digest((a,), "tag")
+    assert "hit_rate" in cache.stats()
+
+
+# ---------------------------------------------------------------------------
+# acceptance: heterogeneous stream through the scheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_heterogeneous_stream_acceptance():
+    """ISSUE-4 acceptance: >= 16 scenes with >= 4 distinct point counts;
+    compilations bounded by #buckets; results match the per-scene loop;
+    out-of-order drain; padding / occupancy / hit-rate telemetry."""
+    params = _mini_params()
+    ladder = geometric_ladder(64, 512)
+    engine = PointCloudEngine(params, n_stages=2, flow="fod",
+                              ladder=ladder)
+    sched = ServeScheduler(engine, max_batch=4, mesh=None)
+
+    sizes = [40, 90, 150, 300]
+    scenes = []
+    for i in range(16):
+        c, m, f = lidar_scene(seed=20 + i % 8, n_points=sizes[i % 4],
+                              grid=24)
+        scenes.append((c, m, f))
+    rids = [sched.submit(c, f, m) for (c, m, f) in scenes]
+    assert sched.flush() + sum(len(q) for q in sched._queues.values()) <= 16
+    results = sched.drain()
+    assert len(results) == 16
+    assert sched.drain() == []                        # drained once
+
+    # out-of-order completion: buckets fill at different times
+    drained_order = [r.rid for r in results]
+    assert sorted(drained_order) == sorted(rids)
+    assert drained_order != sorted(drained_order)
+
+    # numerical parity with a per-scene loop, un-padded row counts
+    by_rid = {r.rid: r for r in results}
+    for rid, (c, m, f) in zip(rids, scenes):
+        r = by_rid[rid]
+        assert r.n_points == c.shape[0]
+        np.testing.assert_array_equal(r.preds, _ref_preds(params, c, m, f))
+
+    # compile bound: one program per bucket per entry point
+    n_buckets_used = len({r.bucket for r in results})
+    assert n_buckets_used == 4
+    comp = engine.compile_stats()
+    assert 0 < comp["build"] <= n_buckets_used
+    assert 0 < comp["apply_batch"] <= n_buckets_used
+
+    # telemetry: second half of the stream repeats the first's geometry
+    stats = sched.stats()
+    assert stats["n_completed"] == 16 and stats["queue_depth"] == 0
+    assert stats["mapping_cache"]["hits"] == 8
+    assert stats["mapping_cache"]["hit_rate"] == pytest.approx(0.5)
+    assert stats["padding_overhead"] > 0
+    assert stats["n_devices"] == 1                    # CPU degrade path
+    for cap, b in stats["buckets"].items():
+        assert 0 < b["occupancy"] <= 1.0
+        assert b["scenes"] == 4
+    # per-request telemetry: repeated geometry reports a mapping hit
+    for rid in rids[8:]:
+        assert by_rid[rid].mapping_hit
+    for rid in rids[:8]:
+        assert not by_rid[rid].mapping_hit
+
+
+def test_scheduler_full_bucket_executes_on_submit():
+    """Continuous batching: a bucket that reaches max_batch runs without
+    waiting for flush()."""
+    params = _mini_params()
+    engine = PointCloudEngine(params, n_stages=2, flow="fod",
+                              ladder=geometric_ladder(64, 128))
+    sched = ServeScheduler(engine, max_batch=2, mesh=None)
+    sched.submit(*_scene_cf(0, 40))
+    assert len(sched.drain()) == 0
+    sched.submit(*_scene_cf(1, 40))                   # fills the bucket
+    res = sched.drain()
+    assert [r.rid for r in res] == [0, 1]
+    assert sched.stats()["queue_depth"] == 0
+
+
+def _scene_cf(seed, n):
+    c, m, f = lidar_scene(seed=40 + seed, n_points=n, grid=16)
+    return c, f, m
+
+
+def test_scheduler_partial_flush_uses_dummy_fill():
+    """A straggler still runs (padded with masked dummy scenes) and the
+    fill is visible in the occupancy telemetry, not the mapping cache."""
+    params = _mini_params()
+    engine = PointCloudEngine(params, n_stages=2, flow="fod",
+                              ladder=geometric_ladder(64, 64))
+    sched = ServeScheduler(engine, max_batch=4, mesh=None)
+    c, f, m = _scene_cf(0, 50)
+    rid = sched.submit(c, f, m)
+    assert sched.flush() == 1
+    (res,) = sched.drain()
+    assert res.rid == rid
+    np.testing.assert_array_equal(res.preds, _ref_preds(params, c, m, f))
+    stats = sched.stats()
+    assert stats["buckets"][64]["dummy_scenes"] == 3
+    assert stats["buckets"][64]["occupancy"] == pytest.approx(0.25)
+    # dummy pyramids are cached scheduler-side: cache counts real scenes
+    assert stats["mapping_cache"]["misses"] == 1
+
+
+def test_scheduler_serve_convenience_and_ladder_overflow():
+    params = _mini_params()
+    engine = PointCloudEngine(params, n_stages=2, flow="fod",
+                              ladder=geometric_ladder(64, 128))
+    sched = ServeScheduler(engine, max_batch=2, mesh=None)
+    out = sched.serve([_scene_cf(i, n) for i, n in enumerate((30, 80))])
+    assert set(out) == {0, 1}
+    with pytest.raises(ValueError, match="exceeds the bucket ladder"):
+        sched.submit(*_scene_cf(9, 400))
+    with pytest.raises(ValueError, match="max_batch"):
+        ServeScheduler(engine, max_batch=0, mesh=None)
+
+
+# ---------------------------------------------------------------------------
+# mixed-bucket parity across flows (vmapped pallas/pallas_fused)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("flow", ["pallas", "pallas_fused"])
+def test_scheduler_parity_across_flows_mixed_buckets(flow):
+    """Satellite: vmapped `pallas`/`pallas_fused` under mixed bucket
+    sizes — scheduler results match a per-scene fod loop (exact argmax,
+    logits agree at atol 1e-5 per the flow-parity suite), including the
+    out-of-order drain path."""
+    params = _mini_params()
+    engine = PointCloudEngine(params, n_stages=2, flow=flow,
+                              ladder=geometric_ladder(48, 96))
+    sched = ServeScheduler(engine, max_batch=2, mesh=None)
+    sizes = [30, 70, 40, 90]                      # alternating buckets
+    scenes = [_scene_cf(i, n) for i, n in enumerate(sizes)]
+    rids = [sched.submit(c, f, m) for (c, f, m) in scenes]
+    sched.flush()
+    results = sched.drain()
+    assert sorted(r.rid for r in results) == rids
+    by_rid = {r.rid: r for r in results}
+    for rid, (c, f, m) in zip(rids, scenes):
+        np.testing.assert_array_equal(
+            by_rid[rid].preds, _ref_preds(params, c, m, f, flow="fod"))
+    assert engine.compile_stats()["apply_batch"] <= 2
+
+
+# ---------------------------------------------------------------------------
+# engine entry points: bounded retraces through the ladder
+# ---------------------------------------------------------------------------
+
+def test_engine_segment_bounded_jit_cache_across_sizes():
+    """Satellite fix: distinct (B, N) no longer retrace per point count —
+    every entry point pads through the ladder, so the jit cache is
+    bounded by the number of buckets actually touched."""
+    params = _mini_params()
+    engine = PointCloudEngine(params, n_stages=2, flow="fod",
+                              ladder=geometric_ladder(128, 256))
+    refs = {}
+    for n in (50, 80, 100, 128):                  # all -> bucket 128
+        c, m, f = lidar_scene(seed=60 + n, n_points=n, grid=20)
+        preds, hit = engine.segment(c, m, f)
+        assert not hit and preds.shape == (n,)
+        refs[n] = (np.asarray(preds), c, m, f)
+    comp = engine.compile_stats()
+    assert comp["build"] == 1 and comp["apply"] == 1
+
+    c, m, f = lidar_scene(seed=61, n_points=200, grid=20)  # bucket 256
+    engine.segment(c, m, f)
+    comp = engine.compile_stats()
+    assert comp["build"] == 2 and comp["apply"] == 2
+
+    # parity: padded serving == per-scene unpadded reference
+    for n, (preds, c, m, f) in refs.items():
+        np.testing.assert_array_equal(preds, _ref_preds(params, c, m, f))
+
+    # repeated geometry is a cache hit; levels can be passed back in
+    c, m, f = refs[80][1:]
+    levels, hit = engine.levels_for(c, m)
+    assert hit
+    preds, hit2 = engine.segment(c, m, f, levels=levels)
+    assert hit2 is None
+    np.testing.assert_array_equal(np.asarray(preds), refs[80][0])
+    assert engine.compile_stats()["apply"] == 2   # still bounded
+
+
+def test_segment_batch_shares_scheduler_without_stealing_results():
+    """A scene submitted directly to the engine's scheduler survives a
+    segment_batch call on the same scheduler: the batch flush executes
+    it, but its result stays drainable (take() vs drain())."""
+    params = _mini_params()
+    engine = PointCloudEngine(params, n_stages=2, flow="fod",
+                              ladder=geometric_ladder(64, 64),
+                              max_batch=2)
+    sched = engine.scheduler()
+    c, f, m = _scene_cf(0, 40)
+    rid = sched.submit(c, f, m)
+
+    bc, bm, bf = [], [], []
+    for i in (1, 2):
+        sc, sf, sm = _scene_cf(i, 40)
+        bc.append(sc), bm.append(sm), bf.append(sf)
+    preds, _ = engine.segment_batch(np.stack(bc), np.stack(bm),
+                                    np.stack(bf))
+    assert preds.shape == (2, 40)
+    # the foreign request was executed by the batch's flush, not lost
+    res = sched.drain()
+    assert [r.rid for r in res] == [rid]
+    np.testing.assert_array_equal(res[0].preds,
+                                  _ref_preds(params, c, m, f))
+
+
+def test_segment_batch_ladder_overflow_leaves_no_orphans():
+    """A ladder overflow raises BEFORE any scene is admitted, so the
+    shared scheduler holds no orphaned queue state."""
+    params = _mini_params()
+    engine = PointCloudEngine(params, n_stages=2, flow="fod",
+                              ladder=geometric_ladder(64, 128))
+    scenes = [_scene_cf(i, 160) for i in range(2)]   # > ladder max
+    coords = np.stack([c for c, _, _ in scenes])
+    feats = np.stack([f for _, f, _ in scenes])
+    mask = np.stack([m for _, _, m in scenes])
+    with pytest.raises(ValueError, match="exceeds the bucket ladder"):
+        engine.segment_batch(coords, mask, feats)
+    stats = engine.scheduler().stats()
+    assert stats["n_submitted"] == 0 and stats["queue_depth"] == 0
+
+
+def test_padding_telemetry_counts_valid_rows():
+    """padding_frac / padding_overhead count dead rows from pre-masked
+    scenes, not just ladder padding."""
+    params = _mini_params()
+    engine = PointCloudEngine(params, n_stages=2, flow="fod",
+                              ladder=geometric_ladder(64, 64))
+    sched = ServeScheduler(engine, max_batch=1, mesh=None)
+    c, m, f = lidar_scene(seed=80, n_points=64, grid=12)
+    assert not m.all()                 # lidar dedupe masks some rows
+    rid = sched.submit(c, f, m)
+    res = sched.take([rid])[rid]
+    expected = 1.0 - m.sum() / 64
+    assert res.padding_frac == pytest.approx(expected)
+    assert sched.stats()["padding_overhead"] == pytest.approx(
+        64 / m.sum() - 1.0)
+
+
+def test_engine_batched_levels_cache_per_scene():
+    """levels_for(batched=True) stacks per-scene cached pyramids: a new
+    batch composition around a repeated scene still hits."""
+    params = _mini_params()
+    engine = PointCloudEngine(params, n_stages=2, flow="fod",
+                              ladder=geometric_ladder(128, 128))
+    scenes = [lidar_scene(seed=70 + i, n_points=100, grid=20)
+              for i in range(3)]
+    coords = np.stack([c for c, _, _ in scenes])
+    mask = np.stack([m for _, m, _ in scenes])
+    _, hit = engine.levels_for(coords, mask, batched=True)
+    assert not hit
+    # reversed composition: every scene already cached
+    _, hit = engine.levels_for(coords[::-1], mask[::-1], batched=True)
+    assert hit
+    assert engine.cache_stats()["hits"] == 3

@@ -326,10 +326,12 @@ def test_vmapped_segment_batch_matches_per_scene_loop():
         np.testing.assert_array_equal(np.asarray(preds[b]),
                                       np.asarray(jnp.argmax(logits, -1)))
 
-    # identical geometry: second request is a cache hit
+    # identical geometry: second request hits the per-scene cache for
+    # every scene (the scheduler digests scene by scene, so a changed
+    # batch composition would still hit on the repeated scenes)
     _, hit = engine.segment_batch(coords, mask, feats)
     assert hit
-    assert engine.cache_stats()["hits"] == 1
+    assert engine.cache_stats()["hits"] == B
 
 
 def test_levels_roundtrip_through_context():

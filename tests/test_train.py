@@ -114,7 +114,7 @@ def test_serve_engine_greedy_generation():
     cfg = configs.get("mixtral-8x7b", reduced=True)
     model = registry.build(cfg)
     params = model.init(jax.random.key(2))
-    from repro.serve.engine import ServeConfig, ServeEngine
+    from repro.serve.lm import ServeConfig, ServeEngine
     eng = ServeEngine(model, params, ServeConfig(max_len=32,
                                                  cache_dtype=jnp.float32,
                                                  compute_dtype=jnp.float32))
