@@ -5,6 +5,7 @@
   bench_cache     Fig. 18/19     MMU configurable cache: miss rate / DRAM
   bench_fusion    Fig. 20        temporal layer fusion DRAM reduction
   bench_models    Figs. 13/14/16 the 8 paper networks + co-design point
+  bench_serve     beyond-paper   pipelined serve hot loop vs synchronous
   bench_moe       beyond-paper   PointAcc dispatch on MoE routing
 
 Prints ``name,us_per_call,derived`` CSV and (with --json, default
@@ -34,10 +35,11 @@ def main(argv=None) -> None:
 
     header()
     from benchmarks import (bench_cache, bench_convflow, bench_fusion,
-                            bench_mapping, bench_models, bench_moe)
+                            bench_mapping, bench_models, bench_moe,
+                            bench_serve)
     failed = []
     for mod in (bench_mapping, bench_convflow, bench_cache, bench_fusion,
-                bench_models, bench_moe):
+                bench_models, bench_serve, bench_moe):
         takes_argv = "argv" in inspect.signature(mod.main).parameters
         try:
             if takes_argv:

@@ -15,15 +15,24 @@ The Mapping Unit output (the ranked SortedCloud + every level's kernel
 maps) depends only on the coordinates, so repeated geometry — a parked
 scanner, multi-sweep aggregation, re-scored frames — is served from the
 session's LRU digest-keyed MappingCache, per scene: batch composition can
-change around a repeated scene and it still hits.
+change around a repeated scene and it still hits.  One level up, a
+micro-batch whose ORDERED composition repeats (the stream replays a
+whole batch) hits the composition-keyed AssemblyCache and skips the
+stacking pass entirely; dispatch is asynchronous (double-buffered
+in-flight slots), so assembling one micro-batch overlaps executing the
+previous one.  `--min-hit-rate` turns the cache telemetry into a CI
+assertion: the combined mapping+assembly hit rate of the stream must
+reach the floor or the driver exits nonzero.
 
 Run:  PYTHONPATH=src python examples/serve_pointcloud.py [--scenes 16]
       [--distinct-scenes 8] [--flow fod] [--max-batch 4]
-      [--metrics-json serve_metrics.json]
+      [--pipeline-depth 2] [--assembly-cache 16] [--max-wait-s T]
+      [--min-hit-rate R] [--metrics-json serve_metrics.json]
 """
 
 import argparse
 import json
+import sys
 
 import numpy as np
 import jax
@@ -48,15 +57,28 @@ def main():
                     choices=["fod", "gms", "pallas", "pallas_fused"])
     ap.add_argument("--max-batch", type=int, default=4,
                     help="scenes per micro-batch (the vmapped axis)")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="in-flight micro-batches per bucket "
+                         "(0 = synchronous)")
+    ap.add_argument("--assembly-cache", type=int, default=16,
+                    help="composition-keyed stacked-pyramid cache entries "
+                         "(0 = per-batch stacking, the PR-4 path)")
+    ap.add_argument("--max-wait-s", type=float, default=None,
+                    help="deadline before a partial micro-batch runs")
+    ap.add_argument("--min-hit-rate", type=float, default=None,
+                    help="fail unless the combined mapping+assembly hit "
+                         "rate reaches this floor (CI smoke assertion)")
     ap.add_argument("--metrics-json", default=None, metavar="PATH",
                     help="dump scheduler stats() as JSON (CI artifact)")
     args = ap.parse_args()
 
     params = MU.mini_minkunet_init(jax.random.key(0), c_in=4, n_classes=2)
     engine = PointCloudEngine(params, N_STAGES, flow=args.flow,
-                              ladder=geometric_ladder(512, 2048),
-                              max_batch=args.max_batch)
-    sched = engine.scheduler()
+                              ladder=geometric_ladder(512, 2048))
+    sched = ServeScheduler(engine, max_batch=args.max_batch,
+                           pipeline_depth=args.pipeline_depth,
+                           assembly_cache_entries=args.assembly_cache,
+                           max_wait_s=args.max_wait_s)
 
     scenes = {}
     for i in range(args.scenes):
@@ -83,17 +105,22 @@ def main():
 
     stats = sched.stats()
     mc = stats["mapping_cache"]
+    ac = stats["assembly_cache"] or {"hits": 0, "misses": 0,
+                                     "hit_rate": 0.0}
     print(f"\nserved {stats['n_completed']}/{stats['n_submitted']} scenes "
           f"on {stats['n_devices']} device(s), max_batch "
           f"{stats['max_batch']}: padding overhead "
           f"{stats['padding_overhead'] * 100:.1f}%, mapping cache "
           f"{mc['hits']} hits / {mc['misses']} misses "
-          f"(hit rate {mc['hit_rate'] * 100:.0f}%), compiles "
+          f"(hit rate {mc['hit_rate'] * 100:.0f}%), assembly cache "
+          f"{ac['hits']} hits / {ac['misses']} misses "
+          f"(hit rate {ac['hit_rate'] * 100:.0f}%), "
+          f"{stats['deadline_flushes']} deadline flushes, compiles "
           f"{stats['compiles']}, mean latency "
           f"{stats['latency_avg_s'] * 1e3:.1f} ms")
     for cap, b in sorted(stats["buckets"].items()):
         print(f"  bucket {cap:5d}: {b['scenes']} scenes in "
-              f"{b['batches']} micro-batches "
+              f"{b['batches']} micro-batches of {b['max_batch']} "
               f"(occupancy {b['occupancy'] * 100:.0f}%, "
               f"{b['dummy_scenes']} dummy fills)")
 
@@ -101,6 +128,18 @@ def main():
         with open(args.metrics_json, "w") as f:
             json.dump(stats, f, indent=2, sort_keys=True)
         print(f"wrote scheduler metrics to {args.metrics_json}")
+
+    if args.min_hit_rate is not None:
+        lookups = mc["hits"] + mc["misses"] + ac["hits"] + ac["misses"]
+        combined = (mc["hits"] + ac["hits"]) / lookups if lookups else 0.0
+        print(f"combined mapping+assembly hit rate "
+              f"{combined * 100:.0f}% (floor "
+              f"{args.min_hit_rate * 100:.0f}%)")
+        if combined < args.min_hit_rate:
+            print(f"FAIL: combined hit rate {combined:.2f} below the "
+                  f"--min-hit-rate floor {args.min_hit_rate:.2f}",
+                  file=sys.stderr)
+            sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -29,18 +29,17 @@ so one object fronts every Mapping Unit operation.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import warnings
 from collections import OrderedDict
 from typing import Any, Callable
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import mapping as M
 from repro.core import pointops as P
 from repro.core import sparseconv as SC
-from repro.core.tensor import MapContext, SparseTensor, infer_kernel_size
+from repro.core.tensor import (MapContext, SparseTensor, geometry_digest,
+                               infer_kernel_size)
 
 FLOWS = ("gms", "fod", "pallas", "pallas_fused")
 
@@ -72,59 +71,35 @@ class SessionConfig:
             raise ValueError(f"unknown engine {self.engine!r}")
 
 
-class MappingCache:
-    """LRU-bounded, digest-keyed reuse of Mapping-Unit work across requests.
+class _LruCache:
+    """Shared LRU mechanics (store / touch / evict / counters) behind the
+    serving caches — `MappingCache` keys per-scene pyramids, the serve
+    scheduler's `AssemblyCache` keys whole stacked micro-batches."""
 
-    The Mapping Unit's output depends only on the coordinates, not the
-    features, so repeated geometry — a parked scanner, multi-sweep
-    aggregation, re-scored frames — is served from cache: one cheap
-    blake2b over the coordinate bytes decides whether the ranking sort +
-    binary searches run at all (~microseconds vs ~tens of ms).
-
-    Values are whatever the builder returns (typically a jit-built level
-    pyramid of concrete arrays).  Hit/miss counters are exposed for
-    serving telemetry; eviction is least-recently-used.
-    """
-
-    def __init__(self, max_entries: int = 32):
+    def __init__(self, max_entries: int):
         if max_entries < 1:
-            raise ValueError("MappingCache needs max_entries >= 1")
+            raise ValueError(
+                f"{type(self).__name__} needs max_entries >= 1")
         self.max_entries = max_entries
-        self._store: OrderedDict[bytes, Any] = OrderedDict()
+        self._store: OrderedDict[Any, Any] = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
-    @staticmethod
-    def digest(arrays, extra=None) -> bytes:
-        """Digest of the geometry bytes; `extra` (any repr-able static
-        metadata — bucket capacity, entry-point tag, ladder id) is folded
-        into the key so the same coordinates padded into different
-        serving buckets, or cached by different entry points, never
-        collide."""
-        h = hashlib.blake2b(digest_size=16)
-        if extra is not None:
-            h.update(repr(extra).encode())
-        for a in arrays:
-            a = np.asarray(a)
-            h.update(str((a.shape, a.dtype)).encode())
-            h.update(a.tobytes())
-        return h.digest()
-
-    def get(self, key_arrays, build: Callable[[], Any], extra=None):
-        """(value, hit) for the geometry identified by `key_arrays` (+
-        optional static `extra` metadata, e.g. the serving bucket);
-        `build()` runs only on a miss."""
-        key = self.digest(key_arrays, extra)
+    def _lookup(self, key):
+        """(value, found) with hit/miss accounting and LRU touch."""
         if key in self._store:
             self.hits += 1
             self._store.move_to_end(key)
             return self._store[key], True
         self.misses += 1
-        value = build()
+        return None, False
+
+    def _insert(self, key, value) -> None:
         self._store[key] = value
         while len(self._store) > self.max_entries:
             self._store.popitem(last=False)
-        return value, False
+            self.evictions += 1
 
     def __len__(self) -> int:
         return len(self._store)
@@ -136,9 +111,84 @@ class MappingCache:
 
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
-                "hit_rate": self.hit_rate,
+                "hit_rate": self.hit_rate, "evictions": self.evictions,
                 "entries": len(self._store),
                 "max_entries": self.max_entries}
+
+
+class MappingCache(_LruCache):
+    """LRU-bounded, digest-keyed reuse of Mapping-Unit work across requests.
+
+    The Mapping Unit's output depends only on the coordinates, not the
+    features, so repeated geometry — a parked scanner, multi-sweep
+    aggregation, re-scored frames — is served from cache: one cheap
+    blake2b over the coordinate bytes decides whether the ranking sort +
+    binary searches run at all (~microseconds vs ~tens of ms).
+
+    Values are whatever the builder returns (typically a jit-built level
+    pyramid of concrete arrays).  Hit/miss/eviction counters are exposed
+    for serving telemetry; eviction is least-recently-used.
+    """
+
+    def __init__(self, max_entries: int = 32):
+        super().__init__(max_entries)
+
+    @staticmethod
+    def digest(arrays, extra=None) -> bytes:
+        """Digest of the geometry bytes (`core.tensor.geometry_digest`);
+        `extra` (any repr-able static metadata — bucket capacity,
+        entry-point tag, ladder id) is folded into the key so the same
+        coordinates padded into different serving buckets, or cached by
+        different entry points, never collide."""
+        return geometry_digest(arrays, extra)
+
+    def get_by_key(self, key: bytes, build: Callable[[], Any]):
+        """(value, hit) for a precomputed digest key; `build()` runs only
+        on a miss.  Callers that already hashed the geometry (the serve
+        scheduler hashes every admitted scene once for its composition
+        keys) use this to avoid digesting the same bytes twice."""
+        value, found = self._lookup(key)
+        if found:
+            return value, True
+        value = build()
+        self._insert(key, value)
+        return value, False
+
+    def get(self, key_arrays, build: Callable[[], Any], extra=None):
+        """(value, hit) for the geometry identified by `key_arrays` (+
+        optional static `extra` metadata, e.g. the serving bucket);
+        `build()` runs only on a miss."""
+        return self.get_by_key(self.digest(key_arrays, extra), build)
+
+
+class AssemblyCache(_LruCache):
+    """Composition-keyed reuse of *stacked* micro-batch pyramids.
+
+    The serve scheduler stacks per-scene level pyramids into one
+    (max_batch, ...) pytree per micro-batch.  On hot loops the SAME
+    ordered composition recurs — a replayed stream, a parked sensor rig,
+    re-scored frames — so the stacked result is cached under the ordered
+    tuple of per-scene pyramid digests (plus bucket capacity, micro-batch
+    width and dummy-tail length).  A hit skips the whole
+    `tree_map`/`stack` pass AND the per-scene mapping-cache lookups under
+    it: the micro-batch assembly cost drops to one tuple lookup.
+
+    Same LRU discipline as `MappingCache`; the eviction counter lets
+    serving telemetry tell cache churn (bound too small for the
+    composition working set) from cold misses.
+    """
+
+    def __init__(self, max_entries: int = 16):
+        super().__init__(max_entries)
+
+    def lookup(self, key):
+        """The cached stacked pytree for a composition key, or None (the
+        miss is counted; the caller assembles and `put`s)."""
+        value, found = self._lookup(key)
+        return value if found else None
+
+    def put(self, key, value) -> None:
+        self._insert(key, value)
 
 
 class PointAccSession:
@@ -299,5 +349,5 @@ class PointAccSession:
 # re-exported for frontend completeness: sessions hand these to conv()
 Epilogue = SC.Epilogue
 
-__all__ = ["FLOWS", "MappingCache", "PointAccSession", "SessionConfig",
-           "SparseTensor", "MapContext", "Epilogue"]
+__all__ = ["FLOWS", "AssemblyCache", "MappingCache", "PointAccSession",
+           "SessionConfig", "SparseTensor", "MapContext", "Epilogue"]

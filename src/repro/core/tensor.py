@@ -27,14 +27,37 @@ careful call-site plumbing.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Union
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import fusion as FU
 from repro.core import mapping as M
 
 CloudEntry = Union[M.PointCloud, M.SortedCloud]
+
+
+def geometry_digest(arrays, extra=None) -> bytes:
+    """16-byte blake2b identity of a geometry.
+
+    Hashes each array's shape/dtype tag + raw bytes; `extra` (any
+    repr-able static metadata — bucket capacity, entry-point tag, stride)
+    is folded in so identical coordinates cached under different serving
+    shapes never collide.  This is the key the serving caches speak: the
+    session's `MappingCache` stores one scene's level pyramid under it,
+    and the serve scheduler's `AssemblyCache` keys a whole micro-batch by
+    the *ordered tuple* of its scenes' digests (composition key).
+    """
+    h = hashlib.blake2b(digest_size=16)
+    if extra is not None:
+        h.update(repr(extra).encode())
+    for a in arrays:
+        a = np.asarray(a)
+        h.update(str((a.shape, a.dtype)).encode())
+        h.update(a.tobytes())
+    return h.digest()
 
 
 def infer_kernel_size(k: int, ndim: int) -> int:

@@ -297,15 +297,26 @@ def shard_over_scenes(fn, mesh: Mesh, axis: str = "scene"):
     The scene axis of every argument must be divisible by the mesh size —
     the scheduler guarantees this by padding micro-batches to a fixed
     scene count that is a multiple of the device count.
+
+    The wrapper is transparent to positional `donate_argnums`: argument i
+    of the returned function is argument i of `fn`, so
+    `jax.jit(shard_over_scenes(fn, ...), donate_argnums=...)` donates the
+    same operands the unsharded `jax.jit(fn, donate_argnums=...)` would
+    (the serve scheduler donates the feats operand this way).  The
+    shard_map body is built once per arity, not per call — the pipelined
+    scheduler dispatches from the submit hot path.
     """
     from repro import compat
 
     spec = P(axis)
+    bodies: dict[int, object] = {}
 
     def sharded(*args):
-        body = compat.shard_map(fn, mesh=mesh,
-                                in_specs=tuple(spec for _ in args),
-                                out_specs=spec, axis_names={axis})
+        body = bodies.get(len(args))
+        if body is None:
+            body = bodies[len(args)] = compat.shard_map(
+                fn, mesh=mesh, in_specs=tuple(spec for _ in args),
+                out_specs=spec, axis_names={axis})
         return body(*args)
 
     return sharded

@@ -25,11 +25,23 @@ import numpy as np
 from repro.core import mapping as M
 
 
+DEFAULT_MAX_BATCH = 4
+
+
 @dataclasses.dataclass(frozen=True)
 class BucketLadder:
-    """An ascending tuple of scene capacities (the compile-shape budget)."""
+    """An ascending tuple of scene capacities (the compile-shape budget).
+
+    `max_batch` optionally carries a per-capacity micro-batch width (same
+    length as `capacities`) — ladder-level serving config, typically
+    seeded from occupancy telemetry via `max_batch_from_occupancy` so
+    rarely-full buckets stop waiting for (and dummy-filling) wide
+    batches.  The scheduler still rounds every width up to a device
+    multiple.
+    """
 
     capacities: tuple[int, ...]
+    max_batch: tuple[int, ...] | None = None
 
     def __post_init__(self):
         caps = tuple(int(c) for c in self.capacities)
@@ -40,6 +52,13 @@ class BucketLadder:
             raise ValueError("BucketLadder capacities must be strictly "
                              f"ascending, got {self.capacities}")
         object.__setattr__(self, "capacities", caps)
+        if self.max_batch is not None:
+            mb = tuple(int(b) for b in self.max_batch)
+            if len(mb) != len(caps) or any(b < 1 for b in mb):
+                raise ValueError(
+                    "BucketLadder max_batch needs one positive width per "
+                    f"capacity, got {self.max_batch} for {caps}")
+            object.__setattr__(self, "max_batch", mb)
 
     @property
     def n_buckets(self) -> int:
@@ -85,6 +104,57 @@ def geometric_ladder(min_capacity: int = 128, max_capacity: int = 65536,
 
 
 DEFAULT_LADDER = geometric_ladder()
+
+
+def resolve_max_batch(spec, ladder: BucketLadder) -> tuple[int, dict]:
+    """(default_width, {capacity: width}) from a max_batch spec.
+
+    Accepts an int (uniform width), a {capacity: width} dict (optional
+    "default" key for unlisted buckets), or None — which falls back to
+    the ladder's own `max_batch` config when present, else
+    `DEFAULT_MAX_BATCH`.  Override capacities must be on the ladder (a
+    typo'd capacity would silently never match a bucket otherwise).
+    """
+    if spec is None:
+        if ladder.max_batch is not None:
+            return (DEFAULT_MAX_BATCH,
+                    dict(zip(ladder.capacities, ladder.max_batch)))
+        return DEFAULT_MAX_BATCH, {}
+    if isinstance(spec, dict):
+        overrides = dict(spec)
+        default = int(overrides.pop("default", DEFAULT_MAX_BATCH))
+        unknown = [c for c in overrides if int(c) not in ladder.capacities]
+        if unknown:
+            raise ValueError(
+                f"max_batch overrides for capacities {unknown} not on the "
+                f"ladder {ladder.capacities}")
+        overrides = {int(c): int(b) for c, b in overrides.items()}
+        widths = [default, *overrides.values()]
+    else:
+        default, overrides, widths = int(spec), {}, [int(spec)]
+    if any(b < 1 for b in widths):
+        raise ValueError(f"max_batch must be >= 1, got {spec}")
+    return default, overrides
+
+
+def max_batch_from_occupancy(bucket_stats: dict, default: int =
+                             DEFAULT_MAX_BATCH, floor: int = 1) -> dict:
+    """Seed per-bucket max_batch overrides from serving telemetry.
+
+    `bucket_stats` is `ServeScheduler.stats()["buckets"]`; each bucket's
+    suggested width is its observed mean real scenes per micro-batch
+    (rounded up), clamped to [floor, default] — a bucket that mostly
+    executed dummy-filled stops waiting for a full wide batch, a busy
+    bucket keeps the full width.  Feed the result back as
+    `ServeScheduler(max_batch={**overrides, "default": default})` or
+    `BucketLadder(caps, max_batch=...)`.
+    """
+    out = {}
+    for cap, b in bucket_stats.items():
+        seen = math.ceil(b["scenes"] / b["batches"]) if b["batches"] else \
+            default
+        out[int(cap)] = max(floor, min(default, seen))
+    return out
 
 
 def pad_scene(coords, mask, feats, capacity: int):

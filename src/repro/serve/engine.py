@@ -30,16 +30,32 @@ The token-LM serving engine (`ServeEngine` and friends) lives in
 
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import PointAccSession
+from repro.api import MappingCache, PointAccSession
 from repro.core import mapping as M
 from repro.models import minkunet as MU
 from repro.serve import buckets as BK
+
+def _silence_cpu_donation_warning():
+    """The apply entry points donate their feats operand (fresh
+    host->device copy every call, so XLA may reuse the buffer for
+    same-shaped temps).  CPU has no buffer donation and warns on every
+    donated call — expected and not actionable, so it is silenced THERE
+    ONLY; on GPU/TPU the warning stays live (an unusable donated buffer
+    is a real perf signal).  Called from engine construction, not at
+    import: `jax.default_backend()` initializes the backend, which must
+    not happen as an import side effect (it would break
+    `jax.distributed.initialize()` / platform config done after
+    import)."""
+    if jax.default_backend() == "cpu":
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
 
 
 class PointCloudEngine:
@@ -56,7 +72,8 @@ class PointCloudEngine:
     def __init__(self, params, n_stages: int, flow: str = "fod",
                  engine: Optional[str] = None, cache_entries: int = 32,
                  ladder: Optional[BK.BucketLadder] = None,
-                 max_batch: int = 4, mesh="auto"):
+                 max_batch=None, mesh="auto"):
+        _silence_cpu_donation_warning()
         self.session = PointAccSession(flow=flow, engine=engine,
                                        cache_entries=cache_entries)
         self.params = params
@@ -76,17 +93,25 @@ class PointCloudEngine:
                                        levels=levels)
             return jnp.argmax(logits, -1)
 
+        # feats (argument 3) is donated: every call ships a fresh copy of
+        # the padded features, so its device buffer is free for reuse the
+        # moment the conv trunk consumes it.  levels (argument 0) is NOT
+        # donated — the scheduler's AssemblyCache keeps stacked pyramids
+        # alive across micro-batches, and donating them would invalidate
+        # cached entries on backends with real buffer donation.
         self._build = jax.jit(build_one)
-        self._apply = jax.jit(apply_one)
+        self._apply = jax.jit(apply_one, donate_argnums=(3,))
         self._apply_batch_fn = jax.vmap(apply_one)
-        self._apply_batch = jax.jit(self._apply_batch_fn)
+        self._apply_batch = jax.jit(self._apply_batch_fn,
+                                    donate_argnums=(3,))
 
     # -- scheduler hookup -------------------------------------------------
 
     def scheduler(self):
         """The engine's lazily-built default `ServeScheduler` (the one
         `segment_batch` serves through); build your own for a different
-        max_batch / mesh."""
+        max_batch / mesh / pipeline depth / assembly-cache bound /
+        deadline policy."""
         if self._scheduler is None:
             from repro.serve.scheduler import ServeScheduler
             self._scheduler = ServeScheduler(self, max_batch=self._max_batch,
@@ -95,16 +120,26 @@ class PointCloudEngine:
 
     # -- mapping ----------------------------------------------------------
 
-    def _levels_padded(self, coords, mask, bucket: int):
+    def scene_key(self, coords, mask, bucket: int) -> bytes:
+        """Digest identifying one already-padded scene's level pyramid in
+        the mapping cache.  The serve scheduler hashes every admitted
+        scene once and reuses the key both for the per-scene pyramid
+        lookup and as its element of the micro-batch composition key
+        (AssemblyCache)."""
+        return MappingCache.digest((np.asarray(coords), np.asarray(mask)),
+                                   extra=("levels", int(bucket)))
+
+    def _levels_padded(self, coords, mask, bucket: int, key: bytes = None):
         """(levels, hit) for ONE already-padded scene; cached per scene
-        with a bucket-aware key."""
+        with a bucket-aware key (precomputed `key` skips re-hashing)."""
         coords = np.asarray(coords)
         mask = np.asarray(mask)
-        return self.session.maps_cache.get(
-            (coords, mask),
+        if key is None:
+            key = self.scene_key(coords, mask, bucket)
+        return self.session.maps_cache.get_by_key(
+            key,
             lambda: jax.block_until_ready(
-                self._build(jnp.asarray(coords), jnp.asarray(mask))),
-            extra=("levels", int(bucket)))
+                self._build(jnp.asarray(coords), jnp.asarray(mask))))
 
     def _scene_levels(self, coords, mask):
         """(levels, hit, bucket) for one raw scene: pad to its bucket,

@@ -3,37 +3,53 @@
 The missing piece between the jit'd vmapped serving path (PR 3) and real
 traffic: scenes arrive one at a time with heterogeneous point counts, but
 a compiled program wants fixed shapes and the accelerator wants full
-batches.  `ServeScheduler` closes the gap:
+batches.  `ServeScheduler` closes the gap — and since the hot-loop PR it
+is a small *pipelined runtime*, not a synchronous loop:
 
   * **admission** — `submit()` pads each scene up to its capacity bucket
-    (`serve.buckets.BucketLadder`) and queues it with its bucket peers;
-  * **grouping** — a bucket queue that reaches `max_batch` scenes is
-    executed immediately as one micro-batch (continuous batching); a
-    final `flush()` runs stragglers with fully-masked dummy scenes
-    filling the fixed scene axis, so every execution has the SAME
-    (max_batch, bucket_capacity) shape — compilations are bounded by the
-    number of buckets, not by the traffic mix;
-  * **mapping reuse** — each scene's level pyramid is built by the
-    engine's single-scene jit and cached per-scene in the session's
-    digest-keyed `MappingCache` (bucket-aware keys), then stacked into
-    the micro-batch: repeated geometry skips the ranking sort + binary
-    searches even when the batch composition around it changes;
-  * **execution** — through the engine's `jax.vmap`-over-scenes path,
-    optionally wrapped in `shard_map` over a scene-axis device mesh
-    (`distributed.sharding.make_scene_mesh` / `shard_over_scenes`); a
-    single-device host degrades to the plain vmapped path with no code
-    changes;
-  * **drain** — results complete out of submission order (whichever
-    bucket fills first executes first); `drain()` hands them back with
-    per-request latency, padding and cache telemetry, and `stats()`
-    aggregates the serving picture (padding overhead %, mapping-cache
-    hit rate, per-bucket occupancy, compile counts).
+    (`serve.buckets.BucketLadder`), digests its geometry once, and queues
+    it with its bucket peers; `submit` is thread-safe, so producers can
+    admit scenes WHILE a micro-batch executes;
+  * **grouping** — a bucket queue that reaches its `max_batch` width
+    (per-bucket overrides supported) executes immediately as one
+    micro-batch; `flush()` runs stragglers with fully-masked dummy
+    scenes; `max_wait_s` adds a deadline — a partial micro-batch executes
+    once its oldest queued request has waited that long (checked in
+    `submit()`/`poll()`).  Every execution of a bucket has the SAME
+    (max_batch, bucket_capacity) shape, so compilations stay bounded by
+    the number of buckets;
+  * **assembly** — per-scene level pyramids come from the session's
+    digest-keyed `MappingCache`, and the *stacked* micro-batch pytree is
+    cached one level up in a composition-keyed `AssemblyCache`
+    (`repro.api`): a hot loop replaying the same ordered batch
+    composition skips the whole `tree_map`/`stack` pass, and dummy-fill
+    tails are pre-stacked once per (bucket, n_dummies).  Host staging
+    goes through preallocated per-(bucket, max_batch) arenas filled in
+    place — no per-batch `np.stack`;
+  * **execution** — through the engine's `jax.vmap`-over-scenes path
+    (feats operand donated), optionally wrapped in `shard_map` over a
+    scene-axis device mesh; dispatch is ASYNC: `_run_bucket` parks an
+    in-flight slot (double-buffered, `pipeline_depth` per bucket) instead
+    of blocking, so assembling micro-batch i+1 overlaps executing
+    micro-batch i.  `pipeline_depth=0` restores the synchronous path
+    (with `assembly_cache_entries=0` it is bit-for-bit the PR-4
+    scheduler — the baseline `benchmarks/bench_serve.py` measures
+    against);
+  * **completion** — in-flight slots retire in `drain()` / `poll()` /
+    `flush()` / `take()`; `poll()` retires only slots whose results are
+    already on host (non-blocking pipeline tick), `drain()`/`take()`
+    block for everything in flight.  Results complete out of submission
+    order with per-request latency, padding and cache telemetry;
+    `stats()` aggregates the serving picture (padding overhead %,
+    mapping + assembly cache hit rates, assembly time, per-bucket
+    occupancy, deadline flushes, compile counts).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 import time
 from collections import OrderedDict, deque
 
@@ -41,9 +57,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import AssemblyCache
 from repro.core import mapping as M
 from repro.distributed import sharding as SH
 from repro.serve import buckets as BK
+
+DEFAULT_PIPELINE_DEPTH = 2
+DEFAULT_ASSEMBLY_ENTRIES = 16
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +78,7 @@ class ServeRequest:
     n_valid: int                # unmasked rows (what the bucket serves)
     bucket: int                 # capacity bucket the scene landed in
     t_submit: float
+    key: bytes = None           # pyramid digest (None on the legacy path)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,7 +92,50 @@ class ServeResult:
     padding_frac: float         # dead fraction of the bucket's rows
                                 # (padding + pre-masked rows)
     mapping_hit: bool           # scene's level pyramid came from cache
+                                # (per-scene hit, or via a whole-batch
+                                # assembly-cache hit)
     latency_s: float            # submit -> result (queue wait included)
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched, not-yet-retired micro-batch."""
+
+    cap: int
+    reqs: list                  # real requests only (dummies carry none)
+    hits: list                  # per-request mapping/assembly hit flags
+    preds: object               # (max_batch, cap) device array, un-waited
+
+
+class _HostArena:
+    """Preallocated host staging buffers for one (bucket, max_batch).
+
+    Micro-batches are filled in place (no per-batch `np.stack`
+    allocation), rotating over `depth` slots so assembling batch i+1
+    never touches the slot batch i was shipped from — the host half of
+    the double buffer.  feats is allocated lazily on first fill (channel
+    count and dtype come from traffic, not config).
+    """
+
+    def __init__(self, depth: int, max_batch: int, cap: int,
+                 coord_dim: int):
+        self.depth = max(1, depth)
+        self.coords = np.full((self.depth, max_batch, cap, coord_dim),
+                              M.SENTINEL, np.int32)
+        self.mask = np.zeros((self.depth, max_batch, cap), bool)
+        self.feats = None
+        self._slot = -1
+
+    def next_slot(self, feats_like: np.ndarray) -> int:
+        # reallocate on a channel-count/dtype change so a mixed stream is
+        # staged at the caller's dtype (no silent in-place downcast) —
+        # exactly like the per-batch np.stack path would behave
+        shape = self.mask.shape + feats_like.shape[1:]
+        if self.feats is None or self.feats.shape != shape \
+                or self.feats.dtype != feats_like.dtype:
+            self.feats = np.zeros(shape, feats_like.dtype)
+        self._slot = (self._slot + 1) % self.depth
+        return self._slot
 
 
 def _jit_cache_size(fn) -> int:
@@ -81,43 +145,98 @@ def _jit_cache_size(fn) -> int:
         return -1
 
 
+def _is_ready(x) -> bool:
+    try:
+        return all(leaf.is_ready()
+                   for leaf in jax.tree_util.tree_leaves(x))
+    except Exception:           # non-jax leaves / older runtimes
+        return True
+
+
 class ServeScheduler:
     """Bucketed continuous batching in front of a `PointCloudEngine`.
 
     The engine owns the model + session (flow/engine policy, MappingCache)
     and the jit'd per-scene and vmapped entry points; the scheduler owns
     the traffic: queues per capacity bucket, fixed-shape micro-batches,
-    the sharded executor, and serving telemetry.
+    the composition-keyed assembly cache, the in-flight pipeline, the
+    sharded executor, and serving telemetry.
 
     mesh="auto" picks a scene-axis mesh over the host's devices
     (`sharding.make_scene_mesh`) and runs micro-batches through
     `shard_map`; on a single-device host it resolves to None and the
-    plain vmapped path runs — same code, no changes.  `max_batch` is
-    rounded up to a multiple of the device count so the scene axis always
-    divides the mesh.
+    plain vmapped path runs — same code, no changes.  Every micro-batch
+    width is rounded up to a multiple of the device count so the scene
+    axis always divides the mesh.
+
+    max_batch              : int, {capacity: width, "default": w} dict,
+                             or None (ladder-level `BucketLadder.max_batch`
+                             config, else `buckets.DEFAULT_MAX_BATCH`).
+    pipeline_depth         : in-flight micro-batches per bucket before
+                             dispatch blocks on the oldest; 0 = fully
+                             synchronous execution.
+    assembly_cache_entries : LRU bound of the composition-keyed stacked-
+                             pyramid cache; 0 disables the cache AND the
+                             host arenas (per-batch stack — the PR-4
+                             assembly path, kept as the benchmark
+                             baseline).
+    max_wait_s             : deadline before a partial micro-batch
+                             executes anyway (None = only on flush).
+
+    `submit`/`poll`/`drain`/`take`/`flush`/`stats` are thread-safe (one
+    reentrant lock around queues, caches and telemetry), so producers can
+    admit scenes while earlier micro-batches execute — including while
+    another thread sits in `drain()`/`flush()`: the lock is released for
+    the duration of every device wait (see `_retire_oldest_locked`).
     """
 
-    def __init__(self, engine, max_batch: int = 4, mesh="auto",
-                 axis: str = "scene"):
-        if max_batch < 1:
-            raise ValueError("max_batch must be >= 1")
+    def __init__(self, engine, max_batch=None, mesh="auto",
+                 axis: str = "scene",
+                 pipeline_depth: int = DEFAULT_PIPELINE_DEPTH,
+                 assembly_cache_entries: int = DEFAULT_ASSEMBLY_ENTRIES,
+                 max_wait_s: float | None = None):
+        if pipeline_depth < 0:
+            raise ValueError("pipeline_depth must be >= 0")
         self.engine = engine
         self.ladder: BK.BucketLadder = engine.ladder
         if mesh == "auto":
             mesh = SH.make_scene_mesh(axis)
         self.mesh = mesh
+        n_dev = int(np.prod(list(mesh.shape.values()))) \
+            if mesh is not None else 1
         if mesh is not None:
-            n_dev = int(np.prod(list(mesh.shape.values())))
-            max_batch = n_dev * max(1, math.ceil(max_batch / n_dev))
             self._apply = jax.jit(
-                SH.shard_over_scenes(engine._apply_batch_fn, mesh, axis))
+                SH.shard_over_scenes(engine._apply_batch_fn, mesh, axis),
+                donate_argnums=(3,))
         else:
             self._apply = engine._apply_batch
-        self.max_batch = int(max_batch)
+        default, overrides = BK.resolve_max_batch(max_batch, self.ladder)
 
+        def round_up(b):
+            return n_dev * max(1, math.ceil(b / n_dev))
+
+        self.max_batch = round_up(default)
+        self.max_batch_overrides = {c: round_up(b)
+                                    for c, b in overrides.items()}
+        self.pipeline_depth = int(pipeline_depth)
+        self.max_wait_s = max_wait_s
+        self._legacy_assembly = assembly_cache_entries == 0
+        self.assembly_cache = None if self._legacy_assembly else \
+            AssemblyCache(assembly_cache_entries)
+
+        self._lock = threading.RLock()
+        # serializes retirement of the in-flight FIFO head: the waiting
+        # thread drops the lock during block_until_ready (so submit()
+        # stays responsive) and this condition keeps a second retirer
+        # from racing past it
+        self._retire_cv = threading.Condition(self._lock)
+        self._retiring = False
         self._queues: OrderedDict[int, deque] = OrderedDict()
         self._completed: deque[ServeResult] = deque()
+        self._inflight: deque[_InFlight] = deque()   # global dispatch FIFO
+        self._arenas: dict[tuple, _HostArena] = {}
         self._dummy_levels: dict[int, object] = {}
+        self._dummy_tails: dict[tuple, object] = {}
         self._next_rid = 0
         # telemetry accumulators
         self._n_submitted = 0
@@ -128,6 +247,12 @@ class ServeScheduler:
         self._batches = {}              # bucket -> micro-batches executed
         self._dummies = {}              # bucket -> dummy fill scenes
         self._latency_sum = 0.0
+        self._assembly_s = 0.0          # host time spent assembling
+        self._deadline_flushes = 0
+
+    def max_batch_for(self, cap: int) -> int:
+        """Micro-batch width of one capacity bucket."""
+        return self.max_batch_overrides.get(cap, self.max_batch)
 
     # -- admission --------------------------------------------------------
 
@@ -137,7 +262,10 @@ class ServeScheduler:
         `coords` (N, 1+D) int32, `feats` (N, C); `mask` defaults to all
         rows valid.  The scene is padded to the smallest ladder bucket
         holding N rows and queued with its bucket peers; a bucket that
-        reaches `max_batch` queued scenes executes immediately.
+        reaches its `max_batch` width dispatches immediately (async —
+        the call returns while the micro-batch executes).  Thread-safe:
+        padding and digesting happen outside the lock, so concurrent
+        producers overlap their admission work.
         """
         coords = np.asarray(coords)
         n = coords.shape[0]
@@ -145,53 +273,82 @@ class ServeScheduler:
             mask = np.ones(n, bool)
         cap = self.ladder.bucket_for(n)
         c, m, f = BK.pad_scene(coords, mask, feats, cap)
-        req = ServeRequest(self._next_rid, c, m, f, n,
-                           int(np.asarray(mask, bool).sum()), cap,
-                           time.monotonic())
-        self._next_rid += 1
-        self._n_submitted += 1
-        self._queues.setdefault(cap, deque()).append(req)
-        if len(self._queues[cap]) >= self.max_batch:
-            self._run_bucket(cap)
-        return req.rid
+        key = None if self._legacy_assembly else \
+            self.engine.scene_key(c, m, cap)
+        n_valid = int(np.asarray(mask, bool).sum())
+        with self._lock:
+            req = ServeRequest(self._next_rid, c, m, f, n, n_valid, cap,
+                               time.monotonic(), key)
+            self._next_rid += 1
+            self._n_submitted += 1
+            self._queues.setdefault(cap, deque()).append(req)
+            if len(self._queues[cap]) >= self.max_batch_for(cap):
+                self._run_bucket(cap)
+            self._check_deadlines_locked()
+            return req.rid
+
+    def poll(self) -> list[ServeResult]:
+        """Non-blocking pipeline tick: deadline-flush overdue partial
+        buckets, retire in-flight micro-batches whose results are already
+        on host, and hand back everything completed so far."""
+        with self._lock:
+            self._check_deadlines_locked()
+            while self._retire_oldest_locked(only_ready=True):
+                pass
+            out = list(self._completed)
+            self._completed.clear()
+            return out
 
     def flush(self) -> int:
         """Execute every queued scene (partial micro-batches are filled
-        with masked dummy scenes); returns how many scenes ran."""
-        ran = 0
-        for cap in list(self._queues):
-            while self._queues[cap]:
-                ran += self._run_bucket(cap)
-        return ran
+        with masked dummy scenes), wait for everything in flight, and
+        return how many scenes ran."""
+        with self._lock:
+            ran = 0
+            for cap in list(self._queues):
+                while self._queues[cap]:
+                    ran += self._run_bucket(cap)
+            while self._retire_oldest_locked():
+                pass
+            return ran
 
     def drain(self) -> list[ServeResult]:
         """Hand back every completed result, in completion order (NOT
-        submission order — whichever bucket filled first ran first)."""
-        out = list(self._completed)
-        self._completed.clear()
-        return out
+        submission order — whichever bucket filled first ran first);
+        waits for in-flight micro-batches."""
+        with self._lock:
+            while self._retire_oldest_locked():
+                pass
+            out = list(self._completed)
+            self._completed.clear()
+            return out
 
     def take(self, rids) -> dict[int, ServeResult]:
         """Pop completed results for `rids` only; anything else stays
         drainable (lets one caller collect its requests from a shared
-        scheduler without discarding another caller's results)."""
-        want = set(rids)
-        out, keep = {}, deque()
-        for r in self._completed:
-            if r.rid in want:
-                out[r.rid] = r
-            else:
-                keep.append(r)
-        self._completed = keep
-        return out
+        scheduler without discarding another caller's results).  Waits
+        for in-flight micro-batches (the rids may be on one)."""
+        with self._lock:
+            while self._retire_oldest_locked():
+                pass
+            want = set(rids)
+            out, keep = {}, deque()
+            for r in self._completed:
+                if r.rid in want:
+                    out[r.rid] = r
+                else:
+                    keep.append(r)
+            self._completed = keep
+            return out
 
     def serve(self, scenes) -> dict[int, ServeResult]:
         """Convenience: submit an iterable of (coords, feats[, mask])
-        scenes, flush, and return {rid: result}."""
-        for scene in scenes:
-            self.submit(*scene)
+        scenes, flush, and return {rid: result} for THIS call's requests
+        only — on a shared scheduler, other callers' results stay
+        drainable/takeable."""
+        rids = [self.submit(*scene) for scene in scenes]
         self.flush()
-        return {r.rid: r for r in self.drain()}
+        return self.take(rids)
 
     # -- execution --------------------------------------------------------
 
@@ -206,81 +363,260 @@ class ServeScheduler:
         return ServeRequest(-1, coords, mask, feats, 0, 0, cap,
                             time.monotonic())
 
-    def _run_bucket(self, cap: int) -> int:
-        q = self._queues[cap]
-        reqs = [q.popleft() for _ in range(min(self.max_batch, len(q)))]
-        n_real = len(reqs)
+    def _dummy_pyramid(self, like: ServeRequest):
+        """The bucket's all-sentinel level pyramid, built once — cached
+        scheduler-side so MappingCache telemetry only counts real
+        scenes."""
+        cap = like.bucket
+        if cap not in self._dummy_levels:
+            self._dummy_levels[cap] = jax.block_until_ready(
+                self.engine._build(
+                    jnp.asarray(np.full_like(like.coords, M.SENTINEL)),
+                    jnp.asarray(np.zeros(cap, bool))))
+        return self._dummy_levels[cap]
 
+    def _dummy_tail(self, like: ServeRequest, n_dummy: int):
+        """The pre-stacked (n_dummy, ...) dummy pyramid tail for partial
+        micro-batches, built once per (bucket, n_dummies)."""
+        key = (like.bucket, n_dummy)
+        if key not in self._dummy_tails:
+            base = self._dummy_pyramid(like)
+            self._dummy_tails[key] = jax.tree_util.tree_map(
+                lambda x: jnp.stack([x] * n_dummy), base)
+        return self._dummy_tails[key]
+
+    def _assemble(self, reqs, cap: int, mb: int):
+        """Arena + composition-cache assembly: (hits, apply operands).
+
+        coords/mask/feats are staged in the bucket's preallocated host
+        arena (rotating slot, filled in place); the stacked level-pyramid
+        pytree — and the stacked coords/mask device arrays, which the
+        composition key fully determines — are served from the
+        AssemblyCache when the ordered composition repeats, else stacked
+        once (real scenes + the pre-stacked dummy tail) and cached.  Only
+        feats is re-staged on a hit: it is the one operand the key does
+        not cover (same geometry, fresh sensor payload).
+        """
+        n_real, n_dummy = len(reqs), mb - len(reqs)
+        arena = self._arenas.get((cap, mb))
+        if arena is None:
+            arena = self._arenas[(cap, mb)] = _HostArena(
+                max(1, self.pipeline_depth), mb, cap,
+                reqs[0].coords.shape[1])
+        s = arena.next_slot(reqs[0].feats)
+        for i, r in enumerate(reqs):
+            arena.feats[s, i] = r.feats
+        if n_dummy:                     # clear stale rows from fuller runs
+            arena.feats[s, n_real:] = 0
+        feats_b = jnp.asarray(arena.feats[s])
+
+        comp_key = (cap, mb, n_dummy, tuple(r.key for r in reqs))
+        cached = self.assembly_cache.lookup(comp_key)
+        if cached is not None:
+            # the whole stacked batch is reused: every scene's mapping
+            # work was skipped wholesale, so each request reports a hit
+            # (the per-scene MappingCache is bypassed, not consulted)
+            levels_b, coords_b, mask_b = cached
+            hits = [True] * n_real
+        else:
+            for i, r in enumerate(reqs):
+                arena.coords[s, i] = r.coords
+                arena.mask[s, i] = r.mask
+            if n_dummy:
+                arena.coords[s, n_real:] = M.SENTINEL
+                arena.mask[s, n_real:] = False
+            coords_b = jnp.asarray(arena.coords[s])
+            mask_b = jnp.asarray(arena.mask[s])
+            per = [self.engine._levels_padded(r.coords, r.mask, cap,
+                                              key=r.key) for r in reqs]
+            hits = [h for _, h in per]
+            levels_b = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *[lv for lv, _ in per])
+            if n_dummy:
+                levels_b = jax.tree_util.tree_map(
+                    lambda a, b: jnp.concatenate([a, b]),
+                    levels_b, self._dummy_tail(reqs[0], n_dummy))
+            self.assembly_cache.put(comp_key,
+                                    (levels_b, coords_b, mask_b))
+        return hits, (levels_b, coords_b, mask_b, feats_b)
+
+    def _assemble_legacy(self, reqs, cap: int, mb: int):
+        """PR-4 assembly (per-batch np.stack + tree_map over per-scene
+        cached pyramids) — the `assembly_cache_entries=0` baseline path
+        that `bench_serve` measures the pipelined path against."""
+        reqs = list(reqs)
         levels, hits = [], []
         for r in reqs:
             lv, hit = self.engine._levels_padded(r.coords, r.mask, cap)
             levels.append(lv)
             hits.append(hit)
-        while len(reqs) < self.max_batch:
-            # dummy fill: cached scheduler-side so the MappingCache
-            # telemetry only counts real scenes
+        while len(reqs) < mb:
             d = self._dummy_request(reqs[0])
-            if cap not in self._dummy_levels:
-                self._dummy_levels[cap] = jax.block_until_ready(
-                    self.engine._build(jnp.asarray(d.coords),
-                                       jnp.asarray(d.mask)))
             reqs.append(d)
-            levels.append(self._dummy_levels[cap])
+            levels.append(self._dummy_pyramid(d))
         levels_b = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
                                           *levels)
         coords_b = jnp.asarray(np.stack([r.coords for r in reqs]))
         mask_b = jnp.asarray(np.stack([r.mask for r in reqs]))
         feats_b = jnp.asarray(np.stack([r.feats for r in reqs]))
-        preds = np.asarray(
-            jax.block_until_ready(
-                self._apply(levels_b, coords_b, mask_b, feats_b)))
+        return hits, (levels_b, coords_b, mask_b, feats_b)
 
+    def _run_bucket(self, cap: int) -> int:
+        """Assemble + dispatch one micro-batch (caller holds the lock).
+
+        Dispatch is asynchronous: the jit call returns a future-like
+        device array that is parked on the in-flight FIFO; completion
+        happens in drain()/poll()/flush()/take().  Once a bucket exceeds
+        `pipeline_depth` in-flight slots the oldest slots retire first
+        (double buffering) — with depth 0 the batch retires immediately
+        (synchronous PR-4 behaviour).
+        """
+        q = self._queues[cap]
+        mb = self.max_batch_for(cap)
+        reqs = [q.popleft() for _ in range(min(mb, len(q)))]
+        n_real = len(reqs)
+        if not n_real:
+            return 0
+
+        t0 = time.perf_counter()
+        if self._legacy_assembly:
+            hits, operands = self._assemble_legacy(reqs, cap, mb)
+        else:
+            hits, operands = self._assemble(reqs, cap, mb)
+        self._assembly_s += time.perf_counter() - t0
+
+        preds = self._apply(*operands)
+        self._inflight.append(_InFlight(cap, reqs, hits, preds))
+
+        self._real_points += sum(r.n_valid for r in reqs)
+        self._issued_rows += mb * cap
+        self._scenes[cap] = self._scenes.get(cap, 0) + n_real
+        self._batches[cap] = self._batches.get(cap, 0) + 1
+        self._dummies[cap] = self._dummies.get(cap, 0) + (mb - n_real)
+
+        if self.pipeline_depth == 0:
+            while self._retire_oldest_locked():
+                pass
+        else:
+            # double buffering: once this bucket exceeds its depth, pay
+            # for the FIFO head (possibly an older bucket's slot — see
+            # _retire_oldest_locked) until the bucket is back in budget
+            while sum(1 for slot in self._inflight if slot.cap == cap) \
+                    > self.pipeline_depth:
+                self._retire_oldest_locked()
+        return n_real
+
+    def _retire_oldest_locked(self, only_ready: bool = False) -> bool:
+        """Retire the OLDEST in-flight micro-batch; returns False when
+        there is nothing (eligible) to retire.
+
+        FIFO retirement keeps completion order = dispatch order, like
+        the synchronous scheduler — even when one bucket's depth
+        overflow pays for older buckets' slots first (they were
+        dispatched earlier, so waiting on them in order is the bound on
+        total in-flight memory, not an accident).  The lock is RELEASED
+        during the device wait so producer threads can keep admitting
+        scenes; `_retiring` serializes retirers on the FIFO head.  With
+        `only_ready` the call never blocks: it retires only a head whose
+        result is already on host (poll()'s non-blocking tick).
+
+        Caller must hold the lock exactly once (every public entry point
+        acquires it with one `with self._lock:` and internal helpers
+        never re-enter), so the release/re-acquire below fully drops it.
+        """
+        if only_ready and self._retiring:
+            return False                # a blocking retirer owns the head
+        while self._retiring:
+            self._retire_cv.wait()
+        if not self._inflight:
+            return False
+        if only_ready and not _is_ready(self._inflight[0].preds):
+            return False
+        slot = self._inflight.popleft()
+        self._retiring = True
+        self._lock.release()
+        try:
+            preds = np.asarray(jax.block_until_ready(slot.preds))
+        except BaseException:
+            self._lock.acquire()
+            self._retiring = False
+            # a failed execution must not orphan the batch: put the slot
+            # back at the head so its requests stay addressable (every
+            # later retire re-raises the same error rather than handing
+            # take()/segment_batch a silent KeyError)
+            self._inflight.appendleft(slot)
+            self._retire_cv.notify_all()
+            raise
+        self._lock.acquire()
+        self._retiring = False
+        self._retire_cv.notify_all()
         t_done = time.monotonic()
-        for i, r in enumerate(reqs[:n_real]):
+        for i, r in enumerate(slot.reqs):
             lat = t_done - r.t_submit
             self._completed.append(ServeResult(
                 r.rid, preds[i, :r.n_points].astype(np.int32), r.n_points,
-                cap, 1.0 - r.n_valid / cap, bool(hits[i]), lat))
+                slot.cap, 1.0 - r.n_valid / slot.cap, bool(slot.hits[i]),
+                lat))
             self._latency_sum += lat
-        self._n_completed += n_real
-        self._real_points += sum(r.n_valid for r in reqs[:n_real])
-        self._issued_rows += self.max_batch * cap
-        self._scenes[cap] = self._scenes.get(cap, 0) + n_real
-        self._batches[cap] = self._batches.get(cap, 0) + 1
-        self._dummies[cap] = self._dummies.get(cap, 0) \
-            + (self.max_batch - n_real)
-        return n_real
+        self._n_completed += len(slot.reqs)
+        return True
+
+    def _check_deadlines_locked(self) -> None:
+        """max_wait_s policy: a partial micro-batch executes once its
+        oldest queued request exceeds the deadline."""
+        if self.max_wait_s is None:
+            return
+        now = time.monotonic()
+        for cap in list(self._queues):
+            q = self._queues[cap]
+            if q and now - q[0].t_submit >= self.max_wait_s:
+                self._deadline_flushes += 1
+                self._run_bucket(cap)
 
     # -- telemetry --------------------------------------------------------
 
     def stats(self) -> dict:
-        """Serving telemetry: padding overhead, mapping-cache hit rate,
-        per-bucket occupancy, compile counts, latency."""
-        buckets = {}
-        for cap in self._batches:
-            issued = self._batches[cap] * self.max_batch
-            buckets[int(cap)] = {
-                "scenes": self._scenes[cap],
-                "batches": self._batches[cap],
-                "dummy_scenes": self._dummies[cap],
-                "occupancy": self._scenes[cap] / issued if issued else 0.0,
+        """Serving telemetry: padding overhead, mapping + assembly cache
+        hit rates, assembly time, per-bucket occupancy, deadline flushes,
+        pipeline state, compile counts, latency."""
+        with self._lock:
+            buckets = {}
+            for cap in self._batches:
+                issued = self._scenes[cap] + self._dummies[cap]
+                buckets[int(cap)] = {
+                    "scenes": self._scenes[cap],
+                    "batches": self._batches[cap],
+                    "dummy_scenes": self._dummies[cap],
+                    "occupancy": (self._scenes[cap] / issued
+                                  if issued else 0.0),
+                    "max_batch": self.max_batch_for(cap),
+                }
+            overhead = (self._issued_rows / self._real_points - 1.0) \
+                if self._real_points else 0.0
+            n_batches = sum(self._batches.values())
+            return {
+                "n_submitted": self._n_submitted,
+                "n_completed": self._n_completed,
+                "queue_depth": sum(len(q) for q in self._queues.values()),
+                "in_flight": len(self._inflight),
+                "padding_overhead": overhead,
+                "mapping_cache": self.engine.cache_stats(),
+                "assembly_cache": (self.assembly_cache.stats()
+                                   if self.assembly_cache else None),
+                "assembly_time_s": self._assembly_s,
+                "assembly_time_per_batch_s": (self._assembly_s / n_batches
+                                              if n_batches else 0.0),
+                "deadline_flushes": self._deadline_flushes,
+                "buckets": buckets,
+                "max_batch": self.max_batch,
+                "max_batch_overrides": dict(self.max_batch_overrides),
+                "pipeline_depth": self.pipeline_depth,
+                "n_devices": (int(np.prod(list(self.mesh.shape.values())))
+                              if self.mesh is not None else 1),
+                "compiles": {
+                    "build": _jit_cache_size(self.engine._build),
+                    "apply_batch": _jit_cache_size(self._apply),
+                },
+                "latency_avg_s": (self._latency_sum / self._n_completed
+                                  if self._n_completed else 0.0),
             }
-        overhead = (self._issued_rows / self._real_points - 1.0) \
-            if self._real_points else 0.0
-        return {
-            "n_submitted": self._n_submitted,
-            "n_completed": self._n_completed,
-            "queue_depth": sum(len(q) for q in self._queues.values()),
-            "padding_overhead": overhead,
-            "mapping_cache": self.engine.cache_stats(),
-            "buckets": buckets,
-            "max_batch": self.max_batch,
-            "n_devices": (int(np.prod(list(self.mesh.shape.values())))
-                          if self.mesh is not None else 1),
-            "compiles": {
-                "build": _jit_cache_size(self.engine._build),
-                "apply_batch": _jit_cache_size(self._apply),
-            },
-            "latency_avg_s": (self._latency_sum / self._n_completed
-                              if self._n_completed else 0.0),
-        }

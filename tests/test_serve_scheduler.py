@@ -2,10 +2,17 @@
 padding, numerical invariance), the ServeScheduler (queueing, bucketed
 micro-batches, out-of-order drain, telemetry), bounded compile counts
 through every engine entry point, and mixed-bucket parity with a
-per-scene loop across the fod / pallas / pallas_fused flows.  The
-shard_map-sharded executor is covered on a mocked multi-device mesh in
-tests/test_distributed.py; here the same code degrades to the
-single-device vmapped path."""
+per-scene loop across the fod / pallas / pallas_fused flows — plus the
+pipelined hot loop: the composition-keyed AssemblyCache (hit / permute /
+evict), pre-stacked dummy tails, double-buffered async dispatch +
+FIFO retirement, thread-safe submit under concurrent producers,
+deadline-aware flush, per-bucket max_batch overrides, and bit-identical
+parity with the synchronous (PR-4) path.  The shard_map-sharded executor
+is covered on a mocked multi-device mesh in tests/test_distributed.py;
+here the same code degrades to the single-device vmapped path."""
+
+import threading
+import time
 
 import numpy as np
 import pytest
@@ -17,7 +24,7 @@ from repro.core import mapping as M
 from repro.data.synthetic import lidar_scene
 from repro.models import minkunet as MU
 from repro.serve.buckets import (BucketLadder, geometric_ladder,
-                                 pad_scene)
+                                 max_batch_from_occupancy, pad_scene)
 from repro.serve.engine import PointCloudEngine
 from repro.serve.scheduler import ServeScheduler
 
@@ -378,6 +385,255 @@ def test_padding_telemetry_counts_valid_rows():
     assert res.padding_frac == pytest.approx(expected)
     assert sched.stats()["padding_overhead"] == pytest.approx(
         64 / m.sum() - 1.0)
+
+
+# ---------------------------------------------------------------------------
+# pipelined hot loop: assembly cache, dummy tails, async dispatch, threads
+# ---------------------------------------------------------------------------
+
+def test_assembly_cache_repeated_vs_permuted_composition():
+    """The composition key is ORDERED per-scene pyramid digests: a
+    replayed micro-batch hits (and bypasses the per-scene mapping cache
+    wholesale), a permuted one misses the assembly cache but still hits
+    the mapping cache scene by scene."""
+    params = _mini_params()
+    engine = PointCloudEngine(params, n_stages=2, flow="fod",
+                              ladder=geometric_ladder(64, 64))
+    sched = ServeScheduler(engine, max_batch=2, mesh=None)
+    a, b = _scene_cf(0, 40), _scene_cf(1, 50)
+
+    r1 = sched.take([sched.submit(c, f, m) for (c, f, m) in (a, b)])
+    ac = sched.stats()["assembly_cache"]
+    assert (ac["hits"], ac["misses"]) == (0, 1)
+
+    mc0 = engine.cache_stats()
+    r2 = sched.take([sched.submit(c, f, m) for (c, f, m) in (a, b)])
+    ac = sched.stats()["assembly_cache"]
+    assert (ac["hits"], ac["misses"]) == (1, 1)
+    mc = engine.cache_stats()           # mapping cache never consulted
+    assert mc["hits"] == mc0["hits"] and mc["misses"] == mc0["misses"]
+    assert all(r.mapping_hit for r in r2.values())
+
+    r3 = sched.take([sched.submit(c, f, m) for (c, f, m) in (b, a)])
+    ac = sched.stats()["assembly_cache"]
+    assert (ac["hits"], ac["misses"]) == (1, 2)
+    mc = engine.cache_stats()           # per-scene pyramids still reused
+    assert mc["hits"] == mc0["hits"] + 2
+
+    for res, order in ((r1, (a, b)), (r2, (a, b)), (r3, (b, a))):
+        for rid, (c, f, m) in zip(sorted(res), order):
+            np.testing.assert_array_equal(res[rid].preds,
+                                          _ref_preds(params, c, m, f))
+    # one bucket, cache on: still one compiled batch program
+    assert engine.compile_stats()["apply_batch"] == 1
+
+
+def test_assembly_cache_lru_eviction_bound():
+    params = _mini_params()
+    engine = PointCloudEngine(params, n_stages=2, flow="fod",
+                              ladder=geometric_ladder(64, 64))
+    sched = ServeScheduler(engine, max_batch=1, mesh=None,
+                           assembly_cache_entries=1)
+    a, b = _scene_cf(0, 40), _scene_cf(1, 50)
+    for scene in (a, b, a):             # a evicted by b, then b by a
+        (c, f, m) = scene
+        sched.take([sched.submit(c, f, m)])
+    ac = sched.stats()["assembly_cache"]
+    assert ac == {"hits": 0, "misses": 3, "hit_rate": 0.0,
+                  "evictions": 2, "entries": 1, "max_entries": 1}
+    with pytest.raises(ValueError, match="max_entries"):
+        ServeScheduler(engine, mesh=None, assembly_cache_entries=-1)
+
+
+def test_dummy_tails_prestacked_per_bucket_and_count():
+    """Partial micro-batches reuse a pre-stacked dummy pyramid tail per
+    (bucket, n_dummies); a replayed straggler composition (same scene,
+    same tail length) hits the assembly cache outright."""
+    params = _mini_params()
+    engine = PointCloudEngine(params, n_stages=2, flow="fod",
+                              ladder=geometric_ladder(64, 64))
+    sched = ServeScheduler(engine, max_batch=4, mesh=None)
+    a, b = _scene_cf(0, 40), _scene_cf(1, 50)
+
+    rid = sched.submit(*a)
+    sched.flush()                       # 1 real + 3 dummies
+    assert set(sched._dummy_tails) == {(64, 3)}
+    sched.submit(*a), sched.submit(*b)
+    sched.flush()                       # 2 real + 2 dummies
+    assert set(sched._dummy_tails) == {(64, 3), (64, 2)}
+    sched.submit(*a)
+    sched.flush()                       # same straggler composition
+    assert set(sched._dummy_tails) == {(64, 3), (64, 2)}
+    assert sched.stats()["assembly_cache"]["hits"] == 1
+
+    res = {r.rid: r for r in sched.drain()}
+    (c, f, m) = a
+    np.testing.assert_array_equal(res[rid].preds,
+                                  _ref_preds(params, c, m, f))
+    # dummy pyramids built scheduler-side: cache counts real scenes only
+    assert sched.stats()["mapping_cache"]["misses"] == 2
+
+
+def test_async_dispatch_parks_in_flight_fifo_retirement():
+    """Dispatch no longer blocks: a full bucket's micro-batch parks on
+    the in-flight FIFO and completes in drain()/poll(); exceeding
+    pipeline_depth retires the oldest slot first, so completion order is
+    dispatch order."""
+    params = _mini_params()
+    engine = PointCloudEngine(params, n_stages=2, flow="fod",
+                              ladder=geometric_ladder(64, 128))
+    sched = ServeScheduler(engine, max_batch=2, mesh=None,
+                           pipeline_depth=2)
+    for n in (40, 40, 90, 90):          # fills bucket 64, then bucket 128
+        sched.submit(*_scene_cf(n, n))
+    st = sched.stats()
+    assert st["in_flight"] == 2         # both parked, neither retired
+    assert st["n_completed"] == 0
+    assert [r.rid for r in sched.drain()] == [0, 1, 2, 3]
+    assert sched.stats()["in_flight"] == 0
+
+    # depth 1: the third dispatch to one bucket forces the first two out
+    sched2 = ServeScheduler(engine, max_batch=1, mesh=None,
+                            pipeline_depth=1)
+    for i in range(3):
+        sched2.submit(*_scene_cf(i, 40))
+    st = sched2.stats()
+    assert st["in_flight"] == 1 and st["n_completed"] == 2
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        ServeScheduler(engine, mesh=None, pipeline_depth=-1)
+
+
+def test_thread_safe_submit_under_concurrent_producers():
+    """submit() from several producer threads while earlier micro-batches
+    execute: no lost/duplicated rids, telemetry adds up, every result
+    matches the per-scene reference."""
+    params = _mini_params()
+    engine = PointCloudEngine(params, n_stages=2, flow="fod",
+                              ladder=geometric_ladder(64, 128))
+    sched = ServeScheduler(engine, max_batch=4, mesh=None)
+    submitted = []
+
+    def producer(t):
+        for j in range(4):
+            c, f, m = _scene_cf(4 * t + j, 40 if j % 2 else 90)
+            rid = sched.submit(c, f, m)
+            submitted.append((rid, (c, f, m)))
+
+    threads = [threading.Thread(target=producer, args=(t,))
+               for t in range(4)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    sched.flush()
+    results = {r.rid: r for r in sched.drain()}
+
+    assert len(submitted) == 16
+    rids = [rid for rid, _ in submitted]
+    assert sorted(rids) == list(range(16))      # unique, gap-free
+    st = sched.stats()
+    assert st["n_submitted"] == 16 and st["n_completed"] == 16
+    assert st["queue_depth"] == 0 and st["in_flight"] == 0
+    for rid, (c, f, m) in submitted:
+        np.testing.assert_array_equal(results[rid].preds,
+                                      _ref_preds(params, c, m, f))
+
+
+@pytest.mark.parametrize("flow", ["pallas", "pallas_fused"])
+def test_pipelined_parity_with_synchronous_path(flow):
+    """Acceptance: the pipelined path (assembly cache + arenas + async
+    dispatch) is bit-identical to the synchronous PR-4 path
+    (pipeline_depth=0, assembly_cache_entries=0) on the same repeated
+    stream, per flow."""
+    params = _mini_params()
+
+    def run(**kw):
+        engine = PointCloudEngine(params, n_stages=2, flow=flow,
+                                  ladder=geometric_ladder(48, 96))
+        sched = ServeScheduler(engine, max_batch=2, mesh=None, **kw)
+        base = [_scene_cf(i, n) for i, n in enumerate((30, 70, 40, 90))]
+        return sched, sched.serve(base * 2)     # repeat -> assembly hits
+
+    sync_sched, sync_out = run(pipeline_depth=0, assembly_cache_entries=0)
+    pipe_sched, pipe_out = run()
+    assert sync_sched.stats()["assembly_cache"] is None
+    assert pipe_sched.stats()["assembly_cache"]["hits"] >= 2
+    assert sorted(sync_out) == sorted(pipe_out)
+    for rid in sync_out:
+        np.testing.assert_array_equal(sync_out[rid].preds,
+                                      pipe_out[rid].preds)
+
+
+def test_serve_returns_only_own_requests():
+    """Satellite fix: serve() on a shared scheduler returns the rids IT
+    submitted; a foreign request executed by the same flush stays
+    drainable."""
+    params = _mini_params()
+    engine = PointCloudEngine(params, n_stages=2, flow="fod",
+                              ladder=geometric_ladder(64, 64))
+    sched = ServeScheduler(engine, max_batch=4, mesh=None)
+    c, f, m = _scene_cf(0, 40)
+    foreign = sched.submit(c, f, m)
+    out = sched.serve([_scene_cf(i, 40) for i in (1, 2)])
+    assert set(out) == {1, 2}                   # not the foreign rid
+    res = sched.drain()
+    assert [r.rid for r in res] == [foreign]
+    np.testing.assert_array_equal(res[0].preds,
+                                  _ref_preds(params, c, m, f))
+
+
+def test_deadline_flush_runs_overdue_partial_batch():
+    """max_wait_s policy: a partial micro-batch executes once its oldest
+    queued request exceeds the deadline (checked in submit()/poll()),
+    counted in stats()["deadline_flushes"]."""
+    params = _mini_params()
+    engine = PointCloudEngine(params, n_stages=2, flow="fod",
+                              ladder=geometric_ladder(64, 64))
+    sched = ServeScheduler(engine, max_batch=4, mesh=None,
+                           max_wait_s=0.05)
+    c, f, m = _scene_cf(0, 40)
+    rid = sched.submit(c, f, m)                 # 1/4: queued, not overdue
+    assert sched.stats()["deadline_flushes"] == 0
+    assert sched.stats()["queue_depth"] == 1
+    time.sleep(0.06)
+    results = sched.poll()                      # deadline fires here
+    assert sched.stats()["deadline_flushes"] == 1
+    res = {r.rid: r for r in results + sched.drain()}
+    np.testing.assert_array_equal(res[rid].preds,
+                                  _ref_preds(params, c, m, f))
+    assert sched.stats()["buckets"][64]["dummy_scenes"] == 3
+
+
+def test_per_bucket_max_batch_overrides_and_ladder_config():
+    """Satellite: per-bucket micro-batch widths via a dict override or
+    ladder-level config, seeded from occupancy telemetry."""
+    params = _mini_params()
+    engine = PointCloudEngine(params, n_stages=2, flow="fod",
+                              ladder=geometric_ladder(64, 128))
+    sched = ServeScheduler(engine, mesh=None,
+                           max_batch={64: 2, "default": 4})
+    assert sched.max_batch_for(64) == 2 and sched.max_batch_for(128) == 4
+    sched.submit(*_scene_cf(0, 40))
+    sched.submit(*_scene_cf(1, 40))             # width-2 bucket dispatches
+    assert len(sched.drain()) == 2
+    st = sched.stats()["buckets"][64]
+    assert st["batches"] == 1 and st["dummy_scenes"] == 0
+    assert st["max_batch"] == 2
+    with pytest.raises(ValueError, match="not on the ladder"):
+        ServeScheduler(engine, mesh=None, max_batch={999: 2})
+
+    ladder = BucketLadder((64, 128), max_batch=(1, 2))
+    engine2 = PointCloudEngine(params, n_stages=2, flow="fod",
+                               ladder=ladder)
+    sched2 = ServeScheduler(engine2, mesh=None)
+    assert sched2.max_batch_for(64) == 1 and sched2.max_batch_for(128) == 2
+    with pytest.raises(ValueError, match="one positive width"):
+        BucketLadder((64, 128), max_batch=(2,))
+
+    # occupancy telemetry -> suggested overrides (mean real scenes/batch)
+    assert max_batch_from_occupancy(
+        {64: {"scenes": 2, "batches": 2}, 128: {"scenes": 7, "batches": 2}},
+        default=4) == {64: 1, 128: 4}
 
 
 def test_engine_batched_levels_cache_per_scene():

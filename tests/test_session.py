@@ -326,10 +326,17 @@ def test_vmapped_segment_batch_matches_per_scene_loop():
         np.testing.assert_array_equal(np.asarray(preds[b]),
                                       np.asarray(jnp.argmax(logits, -1)))
 
-    # identical geometry: second request hits the per-scene cache for
-    # every scene (the scheduler digests scene by scene, so a changed
-    # batch composition would still hit on the repeated scenes)
+    # identical geometry: the second request's ORDERED composition
+    # repeats, so the scheduler's assembly cache serves the whole stacked
+    # batch — the per-scene mapping cache is bypassed, not consulted
     _, hit = engine.segment_batch(coords, mask, feats)
+    assert hit
+    assert engine.cache_stats()["hits"] == 0
+    assert engine.scheduler().stats()["assembly_cache"]["hits"] == 1
+
+    # permuted composition: the assembly key misses, and the per-scene
+    # digests take over — every scene's pyramid hits individually
+    _, hit = engine.segment_batch(coords[::-1], mask[::-1], feats[::-1])
     assert hit
     assert engine.cache_stats()["hits"] == B
 
