@@ -24,10 +24,20 @@ previous one.  `--min-hit-rate` turns the cache telemetry into a CI
 assertion: the combined mapping+assembly hit rate of the stream must
 reach the floor or the driver exits nonzero.
 
+`--inject-faults` runs the same stream through a low-rate chaos plan
+(`serve.faults.FaultPlan`: one transient dispatch failure, one
+NaN-corrupted scene, plus one oversized scene appended to the stream) and
+asserts the fault-tolerance contract: every request completes with
+predictions or a typed error, the transient failure is retried (≥ 1
+recorded retry, zero `exec_failed`), exactly the two bad scenes are
+rejected, and no exception escapes the serve loop.  The failure counters
+land in `--metrics-json` alongside the cache telemetry.
+
 Run:  PYTHONPATH=src python examples/serve_pointcloud.py [--scenes 16]
       [--distinct-scenes 8] [--flow fod] [--max-batch 4]
       [--pipeline-depth 2] [--assembly-cache 16] [--max-wait-s T]
       [--min-hit-rate R] [--metrics-json serve_metrics.json]
+      [--inject-faults]
 """
 
 import argparse
@@ -70,7 +80,17 @@ def main():
                          "rate reaches this floor (CI smoke assertion)")
     ap.add_argument("--metrics-json", default=None, metavar="PATH",
                     help="dump scheduler stats() as JSON (CI artifact)")
+    ap.add_argument("--inject-faults", action="store_true",
+                    help="run through a low-rate FaultPlan and assert "
+                         "the fault-tolerance contract (CI chaos smoke)")
     args = ap.parse_args()
+
+    plan = None
+    if args.inject_faults:
+        from repro.serve.faults import FaultPlan
+        # one transient dispatch failure + one NaN sensor frame; the
+        # oversized scene is appended to the stream below
+        plan = FaultPlan(fail_dispatches={1}, corrupt_scenes={2})
 
     params = MU.mini_minkunet_init(jax.random.key(0), c_in=4, n_classes=2)
     engine = PointCloudEngine(params, N_STAGES, flow=args.flow,
@@ -78,7 +98,7 @@ def main():
     sched = ServeScheduler(engine, max_batch=args.max_batch,
                            pipeline_depth=args.pipeline_depth,
                            assembly_cache_entries=args.assembly_cache,
-                           max_wait_s=args.max_wait_s)
+                           max_wait_s=args.max_wait_s, fault_plan=plan)
 
     scenes = {}
     for i in range(args.scenes):
@@ -89,12 +109,20 @@ def main():
         labels[~mask] = 0
         rid = sched.submit(coords, feats, mask)
         scenes[rid] = (mask, labels)
+    if args.inject_faults:
+        # oversized vs the ladder's top bucket: must come back `rejected`
+        coords, mask, feats = lidar_scene(seed=999, n_points=3000, grid=48)
+        rid = sched.submit(coords, feats, mask)
+        scenes[rid] = (mask, None)
     sched.flush()
 
     results = sched.drain()
     print(f"drained {len(results)} results "
           f"(completion order: {[r.rid for r in results]})")
     for r in results:
+        if r.error is not None:
+            print(f"  req {r.rid:2d}: {r.n_points:5d} pts -> {r.error}")
+            continue
         mask, labels = scenes[r.rid]
         acc = (r.preds[mask] == labels[mask]).mean()
         print(f"  req {r.rid:2d}: {r.n_points:5d} pts -> bucket "
@@ -124,10 +152,42 @@ def main():
               f"(occupancy {b['occupancy'] * 100:.0f}%, "
               f"{b['dummy_scenes']} dummy fills)")
 
+    ft = stats["faults"]
+    print(f"faults: {ft['rejected']} rejected, {ft['shed']} shed, "
+          f"{ft['timeout']} timeout, {ft['exec_failed']} exec_failed; "
+          f"{ft['failed_dispatches']} failed dispatches, "
+          f"{ft['retries']} retries"
+          + (f", recovery {ft['recovery_s'] * 1e3:.1f} ms"
+             if ft["recovery_s"] is not None else ""))
+
     if args.metrics_json:
+        if plan is not None:
+            stats = dict(stats, fault_plan=plan.stats())
         with open(args.metrics_json, "w") as f:
             json.dump(stats, f, indent=2, sort_keys=True)
         print(f"wrote scheduler metrics to {args.metrics_json}")
+
+    if args.inject_faults:
+        n_expected = args.scenes + 1
+        problems = []
+        if len(results) != n_expected:
+            problems.append(f"{len(results)}/{n_expected} requests "
+                            f"completed")
+        if ft["rejected"] != 2:
+            problems.append(f"expected 2 rejected (NaN + oversized), got "
+                            f"{ft['rejected']}")
+        if ft["retries"] < 1:
+            problems.append("no retry recorded for the injected "
+                            "dispatch failure")
+        if ft["exec_failed"] != 0:
+            problems.append(f"{ft['exec_failed']} requests exec_failed "
+                            f"(transient fault not recovered)")
+        if problems:
+            print("FAIL: fault-injection contract violated: "
+                  + "; ".join(problems), file=sys.stderr)
+            sys.exit(1)
+        print("fault-injection contract held: every request completed, "
+              "transient failure retried, bad scenes rejected")
 
     if args.min_hit_rate is not None:
         lookups = mc["hits"] + mc["misses"] + ac["hits"] + ac["misses"]

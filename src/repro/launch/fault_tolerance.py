@@ -2,6 +2,9 @@
 
   * PreemptionHandler — SIGTERM/SIGINT -> finish the in-flight step, force a
     checkpoint, exit cleanly (what a TPU maintenance event sends).
+  * Ticker — joinable daemon ticker (the primitive under Heartbeat and
+    the serve scheduler's background watchdog): on_tick() every
+    interval_s, close() joins so threads never leak past their owner.
   * Heartbeat — per-step wall-time log with a stall watchdog; at cluster
     scale the same records feed the coordinator's straggler detection
     (slowest-k host report).
@@ -51,10 +54,55 @@ class PreemptionHandler:
         return False
 
 
+class Ticker:
+    """Generic daemon ticker: invoke `on_tick()` every `interval_s`
+    until `close()`.  `close()` joins the thread, so a closed ticker
+    never outlives its owner — test runs and scheduler shutdown don't
+    leak daemon threads.  Exceptions from a tick are reported and
+    swallowed (a watchdog must not die of the condition it watches);
+    use as a context manager for scoped lifetimes."""
+
+    def __init__(self, interval_s: float, on_tick: Callable[[], None],
+                 name: str = "ticker"):
+        if interval_s <= 0:
+            raise ValueError(f"Ticker interval must be > 0, got "
+                             f"{interval_s}")
+        self.interval_s = interval_s
+        self.on_tick = on_tick
+        self._stop = threading.Event()
+        self._t = threading.Thread(target=self._run, daemon=True,
+                                   name=name)
+        self._t.start()
+
+    def _run(self):
+        while not self._stop.wait(self.interval_s):
+            try:
+                self.on_tick()
+            except Exception as e:      # noqa: BLE001 — keep ticking
+                print(f"[{self._t.name}] tick failed: {e!r}", flush=True)
+
+    @property
+    def alive(self) -> bool:
+        return self._t.is_alive()
+
+    def close(self, timeout: float = 5.0):
+        """Stop ticking and JOIN the thread (`_run` exits on the next
+        event check, so this returns promptly even mid-interval)."""
+        self._stop.set()
+        self._t.join(timeout)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
 class Heartbeat:
     """Background watchdog: if no beat() within `stall_s`, invoke
     on_stall (default: log loudly).  The cluster version reports to the
-    coordinator instead."""
+    coordinator instead.  `close()` joins the watcher thread."""
 
     def __init__(self, stall_s: float = 600.0,
                  on_stall: Optional[Callable] = None):
@@ -63,21 +111,18 @@ class Heartbeat:
             f"[heartbeat] STALL: no step completed in {dt:.0f}s",
             flush=True))
         self._last = time.time()
-        self._stop = threading.Event()
-        self._t = threading.Thread(target=self._watch, daemon=True)
-        self._t.start()
+        self._ticker = Ticker(stall_s / 4, self._check, name="heartbeat")
 
     def beat(self):
         self._last = time.time()
 
-    def _watch(self):
-        while not self._stop.wait(self.stall_s / 4):
-            dt = time.time() - self._last
-            if dt > self.stall_s:
-                self.on_stall(dt)
+    def _check(self):
+        dt = time.time() - self._last
+        if dt > self.stall_s:
+            self.on_stall(dt)
 
     def close(self):
-        self._stop.set()
+        self._ticker.close()
 
 
 class StepTimer:

@@ -77,6 +77,13 @@ class BucketLadder:
         """Capacity of the smallest bucket holding the scene."""
         return self.capacities[self.index_for(n_points)]
 
+    def fits(self, n_points: int) -> bool:
+        """Non-raising probe: does an n_points-row scene fit the ladder?
+        (Admission control asks before `bucket_for` commits — an
+        oversized scene becomes a `rejected` serve result, not a
+        ValueError out of submit.)"""
+        return 0 <= n_points <= self.capacities[-1]
+
     def padding_fraction(self, n_points: int) -> float:
         """Wasted fraction of the bucket a scene of n_points rows pays."""
         cap = self.bucket_for(n_points)

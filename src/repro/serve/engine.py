@@ -72,7 +72,7 @@ class PointCloudEngine:
     def __init__(self, params, n_stages: int, flow: str = "fod",
                  engine: Optional[str] = None, cache_entries: int = 32,
                  ladder: Optional[BK.BucketLadder] = None,
-                 max_batch=None, mesh="auto"):
+                 max_batch=None, mesh="auto", fault_plan=None):
         _silence_cpu_donation_warning()
         self.session = PointAccSession(flow=flow, engine=engine,
                                        cache_entries=cache_entries)
@@ -81,6 +81,9 @@ class PointCloudEngine:
         self.ladder = ladder if ladder is not None else BK.DEFAULT_LADDER
         self._max_batch = max_batch
         self._mesh = mesh
+        # chaos seam: a serve.faults.FaultPlan picked up by every
+        # scheduler built over this engine (None = nothing injected)
+        self.fault_plan = fault_plan
         self._scheduler = None
 
         def build_one(coords, mask):
@@ -190,7 +193,7 @@ class PointCloudEngine:
                             jnp.asarray(f))
         return preds[:n], hit
 
-    def segment_batch(self, coords, mask, feats):
+    def segment_batch(self, coords, mask, feats, on_error: str = "raise"):
         """(B, N, 1+D) scenes -> ((B, N) class ids, mapping_cache_hit).
 
         Served through the internal `ServeScheduler`: each scene is
@@ -199,10 +202,23 @@ class PointCloudEngine:
         reassembled in submission order.  The hit flag is True only when
         every scene's pyramid came from the mapping cache.
 
+        Per-scene failures (the scheduler's typed `ServeResult.error`
+        taxonomy — rejected / shed / timeout / exec_failed) surface by
+        `on_error`:
+
+          * "raise" (default) — raise `RuntimeError` naming every failed
+            scene index and its error;
+          * "partial" — return `(preds, hit, errors)` where `errors` is
+            {scene_index: ServeError} and failed scenes' prediction rows
+            are filled with -1 (never a valid class id).
+
         The scheduler is shared (`self.scheduler()`): scenes another
         caller queued are flushed along with this batch, but their
         results stay drainable — only this call's requests are taken.
         """
+        if on_error not in ("raise", "partial"):
+            raise ValueError(f"on_error must be 'raise' or 'partial', "
+                             f"got {on_error!r}")
         coords = np.asarray(coords)
         mask = np.asarray(mask)
         feats = np.asarray(feats)
@@ -214,8 +230,23 @@ class PointCloudEngine:
                 for b in range(coords.shape[0])]
         sched.flush()
         by_rid = sched.take(rids)
-        preds = np.stack([by_rid[rid].preds for rid in rids])
-        hit = all(by_rid[rid].mapping_hit for rid in rids)
+        errors = {b: by_rid[rid].error for b, rid in enumerate(rids)
+                  if by_rid[rid].error is not None}
+        if errors and on_error == "raise":
+            detail = "; ".join(f"scene {b}: {err}"
+                               for b, err in sorted(errors.items()))
+            raise RuntimeError(
+                f"segment_batch: {len(errors)}/{len(rids)} scenes "
+                f"failed — {detail}")
+        n = coords.shape[1]
+        preds = np.stack([
+            np.asarray(by_rid[rid].preds) if b not in errors
+            else np.full(n, -1, np.int32)
+            for b, rid in enumerate(rids)])
+        hit = all(by_rid[rid].mapping_hit for b, rid in enumerate(rids)
+                  if b not in errors)
+        if on_error == "partial":
+            return jnp.asarray(preds), hit, errors
         return jnp.asarray(preds), hit
 
     # -- telemetry --------------------------------------------------------

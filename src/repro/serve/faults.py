@@ -1,0 +1,281 @@
+"""Fault taxonomy, admission validation, and the fault-injection harness
+for the point-cloud serving runtime.
+
+PointAcc's target workloads are real-time streams (AR/VR, autonomous
+driving): a serving stack for them must degrade gracefully — one
+malformed scene or one failed dispatch must cost exactly that request,
+never the stream.  This module holds the three pieces the scheduler
+builds its fault-tolerance on:
+
+  * **`ServeError`** — the typed error a request completes with instead
+    of an exception escaping `submit()`/`drain()`.  Four codes:
+
+      `rejected`     admission control refused the scene (bad shape /
+                     dtype, NaN features, packed-key budget overflow,
+                     oversized vs the top ladder bucket, closed
+                     scheduler);
+      `shed`         load shedding — the bucket's backlog bound was
+                     exceeded, newest request rejected;
+      `timeout`      the request's `deadline_s` elapsed while it was
+                     still queued;
+      `exec_failed`  its micro-batch dispatch raised, and the retry /
+                     bisect policy could not complete it.
+
+  * **`validate_scene`** — the up-front admission check `submit()` runs
+    before a scene touches the pipeline: shapes, dtypes, finite
+    features, the packed-key coordinate budget, and the ladder fit.  It
+    raises `AdmissionError` (a `ValueError` carrying the error code) so
+    the scheduler can route the failure into a `rejected` result.
+
+  * **`FaultPlan`** — the injectable chaos seam threaded through
+    `ServeScheduler`/`PointCloudEngine`: fail dispatch *i* (one-shot —
+    the retry gets a fresh dispatch id and succeeds), poison request
+    *j* (every dispatch containing it fails, exercising the bisect
+    isolation path), corrupt submitted scene *k* (NaN features, caught
+    by admission control), delay bucket *c* (slow-device simulation for
+    deadline / shed / watchdog tests).  The no-plan path costs one
+    `is None` check per seam — the happy path stays bit-identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Mapping
+
+import numpy as np
+
+from repro.core import mapping as M
+from repro.core import packed as PK
+
+# -- error taxonomy ---------------------------------------------------------
+
+REJECTED = "rejected"
+TIMEOUT = "timeout"
+SHED = "shed"
+EXEC_FAILED = "exec_failed"
+ERROR_CODES = (REJECTED, TIMEOUT, SHED, EXEC_FAILED)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeError:
+    """Typed failure a `ServeResult` carries instead of predictions."""
+
+    code: str                   # one of ERROR_CODES
+    message: str
+
+    def __post_init__(self):
+        if self.code not in ERROR_CODES:
+            raise ValueError(f"unknown serve error code {self.code!r}; "
+                             f"expected one of {ERROR_CODES}")
+
+    def __str__(self):
+        return f"[{self.code}] {self.message}"
+
+
+class AdmissionError(ValueError):
+    """A scene failed admission validation; `code` is the ServeError
+    code the scheduler should complete the request with."""
+
+    def __init__(self, message: str, code: str = REJECTED):
+        super().__init__(message)
+        self.code = code
+
+    def as_error(self) -> ServeError:
+        return ServeError(self.code, str(self))
+
+
+class InjectedFault(RuntimeError):
+    """Raised by a `FaultPlan` seam — distinguishable from organic
+    failures in logs, handled identically by the retry machinery."""
+
+
+# -- admission validation ---------------------------------------------------
+
+def validate_scene(coords, feats, mask, ladder, *,
+                   check_key_budget: bool = True,
+                   coord_dim: int | None = None,
+                   feat_shape: tuple | None = None):
+    """Validate one raw scene before it enters the serving pipeline.
+
+    Returns `(coords, mask, feats, n, cap)` as host numpy arrays with
+    the bucket capacity resolved, or raises `AdmissionError` ("rejected")
+    describing exactly what is wrong:
+
+      * coords must be a (N, 1+D) integer-compatible array with every
+        valid row finite;
+      * mask (when given) must be a (N,) boolean-compatible vector;
+      * feats must be (N, C...) with finite values on valid rows — a NaN
+        feature would propagate through the whole micro-batch's conv
+        trunk, so it is refused up front;
+      * with `check_key_budget` (the packed-key v2 engine), valid
+        coordinates must fit the 62-bit key budget (batch 0..BATCH_MAX,
+        spatial COORD_MIN..COORD_MAX) — out-of-budget points would
+        otherwise raise out of the jit build mid-pipeline;
+      * `coord_dim` / `feat_shape` (first-seen values, supplied by the
+        scheduler) must match — mixed widths cannot share a micro-batch;
+      * N must fit the ladder's top bucket.
+    """
+    try:
+        coords = np.asarray(coords)
+    except Exception as e:              # ragged / non-numeric input
+        raise AdmissionError(f"coords not array-convertible: {e}")
+    if coords.ndim != 2 or coords.shape[1] < 2:
+        raise AdmissionError(
+            f"coords must be (N, 1+D) with D >= 1, got shape "
+            f"{coords.shape}")
+    if coord_dim is not None and coords.shape[1] != coord_dim:
+        raise AdmissionError(
+            f"coords width {coords.shape[1]} does not match this "
+            f"scheduler's stream ({coord_dim} columns)")
+    n = coords.shape[0]
+    if np.issubdtype(coords.dtype, np.floating):
+        if not np.isfinite(coords).all():
+            raise AdmissionError("coords contain NaN/Inf values")
+    elif not np.issubdtype(coords.dtype, np.integer):
+        raise AdmissionError(
+            f"coords dtype {coords.dtype} is not integer-compatible")
+
+    if mask is None:
+        mask = np.ones(n, bool)
+    else:
+        try:
+            mask = np.asarray(mask, bool)
+        except Exception as e:
+            raise AdmissionError(f"mask not bool-convertible: {e}")
+        if mask.shape != (n,):
+            raise AdmissionError(
+                f"mask shape {mask.shape} does not match {n} coord rows")
+
+    try:
+        feats = np.asarray(feats)
+    except Exception as e:
+        raise AdmissionError(f"feats not array-convertible: {e}")
+    if feats.ndim < 1 or feats.shape[0] != n:
+        raise AdmissionError(
+            f"feats shape {feats.shape} does not match {n} coord rows")
+    if feat_shape is not None and feats.shape[1:] != tuple(feat_shape):
+        raise AdmissionError(
+            f"feats trailing shape {feats.shape[1:]} does not match this "
+            f"scheduler's stream ({tuple(feat_shape)})")
+    if np.issubdtype(feats.dtype, np.floating) and n:
+        valid_feats = feats[mask]
+        if valid_feats.size and not np.isfinite(valid_feats).all():
+            raise AdmissionError(
+                "feats contain NaN/Inf values on valid rows")
+
+    if check_key_budget and coords.shape[1] == 4 and mask.any():
+        vc = coords[mask].astype(np.int64)
+        # all-sentinel spatial rows are "not a point" to the mapping
+        # engine (they sort to the end and never match) — exempt from
+        # the budget like the padding they usually are
+        vc = vc[(vc[:, 1:] != M.SENTINEL).any(axis=1)]
+        if vc.size and ((vc[:, 0] < 0).any()
+                        or (vc[:, 0] > PK.BATCH_MAX).any()):
+            raise AdmissionError(
+                f"batch index outside the packed-key budget "
+                f"(0..{PK.BATCH_MAX}); use engine='v1' for such clouds")
+        sp = vc[:, 1:]
+        if sp.size and ((sp < PK.COORD_MIN).any()
+                        or (sp > PK.COORD_MAX).any()):
+            raise AdmissionError(
+                f"coordinates outside the packed-key budget "
+                f"({PK.COORD_MIN}..{PK.COORD_MAX}); use engine='v1' for "
+                f"such clouds")
+
+    try:
+        cap = ladder.bucket_for(n)
+    except ValueError as e:             # oversized vs the top bucket
+        raise AdmissionError(str(e))
+    return coords, mask, feats, n, cap
+
+
+# -- fault injection --------------------------------------------------------
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Deterministic chaos plan threaded through the serving runtime.
+
+    All seams are thread-safe (producers submit concurrently) and cheap
+    enough to leave compiled artifacts untouched: a plan never changes
+    shapes or compiled programs, only *when* a wait raises or a scene
+    arrives corrupted.
+
+    fail_dispatches : dispatch ordinals (0-based, global across buckets
+                      and retries) whose device wait raises
+                      `InjectedFault` — retries get fresh ordinals, so a
+                      single entry models a transient fault.
+    poison_rids     : request ids whose *every* containing dispatch
+                      fails — models a scene that crashes the kernel,
+                      exercising bisect isolation + `exec_failed`.
+    corrupt_scenes  : submit ordinals (0-based, per plan) whose feats
+                      are NaN-corrupted before validation — models a
+                      garbage sensor frame, caught by admission control.
+    delay_buckets   : {bucket_capacity: seconds} slept in the device
+                      wait — models a slow device for deadline / shed /
+                      watchdog tests.
+    """
+
+    fail_dispatches: frozenset = frozenset()
+    poison_rids: frozenset = frozenset()
+    corrupt_scenes: frozenset = frozenset()
+    delay_buckets: Mapping[int, float] = dataclasses.field(
+        default_factory=dict)
+
+    def __post_init__(self):
+        self.fail_dispatches = frozenset(int(i) for i in self.fail_dispatches)
+        self.poison_rids = frozenset(int(i) for i in self.poison_rids)
+        self.corrupt_scenes = frozenset(int(i) for i in self.corrupt_scenes)
+        self.delay_buckets = {int(c): float(s)
+                              for c, s in dict(self.delay_buckets).items()}
+        self._lock = threading.Lock()
+        self._n_submits = 0
+        self._n_corrupted = 0
+        self._n_injected = 0
+        self._n_delays = 0
+
+    # -- seams (called by the scheduler) ----------------------------------
+
+    def on_submit(self, coords, feats, mask):
+        """Admission seam: corrupt the feats of a planned submit ordinal
+        (NaN payload — admission control must catch it)."""
+        with self._lock:
+            i = self._n_submits
+            self._n_submits += 1
+            corrupt = i in self.corrupt_scenes
+            if corrupt:
+                self._n_corrupted += 1
+        if corrupt:
+            # the whole payload goes NaN (a garbage sensor frame): some
+            # row is valid whatever the mask, so admission always trips
+            feats = np.full_like(np.asarray(feats, np.float32), np.nan)
+        return coords, feats, mask
+
+    def check_wait(self, dispatch_id: int, cap: int, rids) -> None:
+        """Wait seam (runs OUTSIDE the scheduler lock): sleep the
+        bucket's planned delay, then raise `InjectedFault` if this
+        dispatch — or any poisoned request on it — is planned to fail."""
+        delay = self.delay_buckets.get(int(cap), 0.0)
+        if delay > 0:
+            with self._lock:
+                self._n_delays += 1
+            time.sleep(delay)
+        poisoned = self.poison_rids.intersection(int(r) for r in rids)
+        if int(dispatch_id) in self.fail_dispatches or poisoned:
+            with self._lock:
+                self._n_injected += 1
+            raise InjectedFault(
+                f"injected dispatch failure (dispatch {dispatch_id}, "
+                f"bucket {cap}, rids {sorted(int(r) for r in rids)}"
+                + (f", poisoned {sorted(poisoned)}" if poisoned else "")
+                + ")")
+
+    # -- telemetry --------------------------------------------------------
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"submits_seen": self._n_submits,
+                    "scenes_corrupted": self._n_corrupted,
+                    "failures_injected": self._n_injected,
+                    "delays_injected": self._n_delays}

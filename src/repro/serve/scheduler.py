@@ -6,18 +6,25 @@ a compiled program wants fixed shapes and the accelerator wants full
 batches.  `ServeScheduler` closes the gap — and since the hot-loop PR it
 is a small *pipelined runtime*, not a synchronous loop:
 
-  * **admission** — `submit()` pads each scene up to its capacity bucket
-    (`serve.buckets.BucketLadder`), digests its geometry once, and queues
-    it with its bucket peers; `submit` is thread-safe, so producers can
-    admit scenes WHILE a micro-batch executes;
+  * **admission** — `submit()` validates each scene up front
+    (`serve.faults.validate_scene`: shapes, dtypes, finite features, the
+    packed-key coordinate budget, the ladder fit) and refuses bad input
+    with a typed `rejected` result instead of crashing mid-pipeline;
+    accepted scenes are padded to their capacity bucket
+    (`serve.buckets.BucketLadder`), digested once, and queued with their
+    bucket peers.  Bounded backlog (`max_backlog`) sheds the newest
+    request with a `shed` result when a bucket backs up; a per-request
+    `deadline_s` converts overdue queued requests into `timeout`
+    results.  `submit` is thread-safe, so producers can admit scenes
+    WHILE a micro-batch executes;
   * **grouping** — a bucket queue that reaches its `max_batch` width
     (per-bucket overrides supported) executes immediately as one
     micro-batch; `flush()` runs stragglers with fully-masked dummy
     scenes; `max_wait_s` adds a deadline — a partial micro-batch executes
     once its oldest queued request has waited that long (checked in
-    `submit()`/`poll()`).  Every execution of a bucket has the SAME
-    (max_batch, bucket_capacity) shape, so compilations stay bounded by
-    the number of buckets;
+    `submit()`/`poll()` and by the background watchdog).  Every
+    execution of a bucket has the SAME (max_batch, bucket_capacity)
+    shape, so compilations stay bounded by the number of buckets;
   * **assembly** — per-scene level pyramids come from the session's
     digest-keyed `MappingCache`, and the *stacked* micro-batch pytree is
     cached one level up in a composition-keyed `AssemblyCache`
@@ -35,14 +42,29 @@ is a small *pipelined runtime*, not a synchronous loop:
     (with `assembly_cache_entries=0` it is bit-for-bit the PR-4
     scheduler — the baseline `benchmarks/bench_serve.py` measures
     against);
+  * **failure isolation** — a dispatch whose device wait raises does NOT
+    poison the FIFO: the slot is dropped, its requests are retried as
+    fresh dispatches (bisected into halves when the batch held several
+    scenes, isolating a single poison scene in O(log max_batch)
+    rounds), and a request that exhausts its `max_retries` re-dispatch
+    budget completes with a typed `exec_failed` result while the
+    scheduler keeps serving.  `serve.faults.FaultPlan` is the injectable
+    chaos seam the policy is tested with;
   * **completion** — in-flight slots retire in `drain()` / `poll()` /
     `flush()` / `take()`; `poll()` retires only slots whose results are
     already on host (non-blocking pipeline tick), `drain()`/`take()`
-    block for everything in flight.  Results complete out of submission
-    order with per-request latency, padding and cache telemetry;
-    `stats()` aggregates the serving picture (padding overhead %,
-    mapping + assembly cache hit rates, assembly time, per-bucket
-    occupancy, deadline flushes, compile counts).
+    block for everything in flight, and the background watchdog
+    (`watchdog_s`, a `launch.fault_tolerance.Ticker`) retires ready
+    slots and fires `max_wait_s` deadline flushes on an *idle*
+    scheduler, so `poll()` is truly constant-time.  Results complete out
+    of submission order with per-request latency, padding and cache
+    telemetry; errors arrive as `ServeResult.error` (typed taxonomy:
+    rejected / shed / timeout / exec_failed) — no exception escapes
+    `submit`/`poll`/`drain`/`take`/`serve`.  `stats()` aggregates the
+    serving picture (padding overhead %, cache hit rates, per-bucket
+    occupancy, deadline flushes, compile counts, fault counters).
+    `close()` (or the context manager) drains in-flight work and joins
+    the watchdog thread.
 """
 
 from __future__ import annotations
@@ -60,10 +82,15 @@ import numpy as np
 from repro.api import AssemblyCache
 from repro.core import mapping as M
 from repro.distributed import sharding as SH
+from repro.launch import fault_tolerance as FT
 from repro.serve import buckets as BK
+from repro.serve import faults as FLT
+from repro.serve.faults import ServeError
 
 DEFAULT_PIPELINE_DEPTH = 2
 DEFAULT_ASSEMBLY_ENTRIES = 16
+DEFAULT_MAX_RETRIES = 2
+_MIN_WATCHDOG_S = 0.005
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,22 +106,33 @@ class ServeRequest:
     bucket: int                 # capacity bucket the scene landed in
     t_submit: float
     key: bytes = None           # pyramid digest (None on the legacy path)
+    deadline: float | None = None   # absolute monotonic queue deadline
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeResult:
-    """One served scene, un-padded back to the caller's row count."""
+    """One served scene, un-padded back to the caller's row count.
+
+    Exactly one of `preds` / `error` is set: a request either completes
+    with predictions or with a typed `ServeError` (rejected / shed /
+    timeout / exec_failed) — the stream survives either way.
+    """
 
     rid: int
-    preds: np.ndarray           # (n_points,) int32 class ids
+    preds: np.ndarray | None    # (n_points,) int32 class ids; None on error
     n_points: int
-    bucket: int
+    bucket: int                 # -1 when the scene never reached a bucket
     padding_frac: float         # dead fraction of the bucket's rows
                                 # (padding + pre-masked rows)
     mapping_hit: bool           # scene's level pyramid came from cache
                                 # (per-scene hit, or via a whole-batch
                                 # assembly-cache hit)
     latency_s: float            # submit -> result (queue wait included)
+    error: ServeError | None = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
 
 
 @dataclasses.dataclass
@@ -105,6 +143,8 @@ class _InFlight:
     reqs: list                  # real requests only (dummies carry none)
     hits: list                  # per-request mapping/assembly hit flags
     preds: object               # (max_batch, cap) device array, un-waited
+    dispatch_id: int = 0        # global dispatch ordinal (fault seam key)
+    retries: int = 0            # redispatch generation (0 = fresh)
 
 
 class _HostArena:
@@ -160,7 +200,8 @@ class ServeScheduler:
     and the jit'd per-scene and vmapped entry points; the scheduler owns
     the traffic: queues per capacity bucket, fixed-shape micro-batches,
     the composition-keyed assembly cache, the in-flight pipeline, the
-    sharded executor, and serving telemetry.
+    sharded executor, the failure-isolation policy, and serving
+    telemetry.
 
     mesh="auto" picks a scene-axis mesh over the host's devices
     (`sharding.make_scene_mesh`) and runs micro-batches through
@@ -182,21 +223,60 @@ class ServeScheduler:
                              baseline).
     max_wait_s             : deadline before a partial micro-batch
                              executes anyway (None = only on flush).
+    validate               : admission validation (`faults.validate_scene`)
+                             on submit; malformed / oversized scenes
+                             complete with a `rejected` result instead of
+                             raising.  False restores the raise-on-bad-
+                             input PR-5 behaviour (the bench baseline).
+    max_backlog            : per-bucket bound on outstanding (queued +
+                             in-flight) scenes; a submit beyond it is
+                             shed with a `shed` result.  None = unbounded.
+                             A natural setting is
+                             (pipeline_depth + 1) * max_batch.
+    max_retries            : re-dispatch budget per request after a
+                             failed execution (2 isolates one poison
+                             scene in a micro-batch of up to 4 via
+                             bisect); a request that exhausts it
+                             completes with `exec_failed`.
+    retry_bisect           : split a failed multi-scene batch into halves
+                             on retry (poison isolation) instead of
+                             retrying it whole.
+    watchdog_s             : background ticker interval — fires
+                             `max_wait_s` deadline flushes, expires
+                             per-request deadlines and retires ready
+                             slots on an idle scheduler.  None = auto
+                             (max_wait_s / 4 when max_wait_s is set,
+                             else off); 0 disables.  `close()` joins it.
+    fault_plan             : `faults.FaultPlan` chaos seam (tests/CI);
+                             None (the default) leaves the hot path
+                             bit-identical.
 
     `submit`/`poll`/`drain`/`take`/`flush`/`stats` are thread-safe (one
     reentrant lock around queues, caches and telemetry), so producers can
     admit scenes while earlier micro-batches execute — including while
     another thread sits in `drain()`/`flush()`: the lock is released for
     the duration of every device wait (see `_retire_oldest_locked`).
+    None of them raise for per-request problems — a request always
+    completes, with predictions or with a typed `ServeResult.error`.
     """
 
     def __init__(self, engine, max_batch=None, mesh="auto",
                  axis: str = "scene",
                  pipeline_depth: int = DEFAULT_PIPELINE_DEPTH,
                  assembly_cache_entries: int = DEFAULT_ASSEMBLY_ENTRIES,
-                 max_wait_s: float | None = None):
+                 max_wait_s: float | None = None,
+                 validate: bool = True,
+                 max_backlog: int | None = None,
+                 max_retries: int = DEFAULT_MAX_RETRIES,
+                 retry_bisect: bool = True,
+                 watchdog_s: float | None = None,
+                 fault_plan: FLT.FaultPlan | None = None):
         if pipeline_depth < 0:
             raise ValueError("pipeline_depth must be >= 0")
+        if max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if max_backlog is not None and max_backlog < 1:
+            raise ValueError("max_backlog must be >= 1 (or None)")
         self.engine = engine
         self.ladder: BK.BucketLadder = engine.ladder
         if mesh == "auto":
@@ -220,6 +300,15 @@ class ServeScheduler:
                                     for c, b in overrides.items()}
         self.pipeline_depth = int(pipeline_depth)
         self.max_wait_s = max_wait_s
+        self.validate = bool(validate)
+        self.max_backlog = max_backlog
+        self.max_retries = int(max_retries)
+        self.retry_bisect = bool(retry_bisect)
+        self.fault_plan = fault_plan if fault_plan is not None else \
+            getattr(engine, "fault_plan", None)
+        # the packed-key budget is only a constraint for the v2 engine
+        self._check_key_budget = \
+            getattr(engine.session.config, "engine", None) != "v1"
         self._legacy_assembly = assembly_cache_entries == 0
         self.assembly_cache = None if self._legacy_assembly else \
             AssemblyCache(assembly_cache_entries)
@@ -231,6 +320,7 @@ class ServeScheduler:
         # from racing past it
         self._retire_cv = threading.Condition(self._lock)
         self._retiring = False
+        self._closed = False
         self._queues: OrderedDict[int, deque] = OrderedDict()
         self._completed: deque[ServeResult] = deque()
         self._inflight: deque[_InFlight] = deque()   # global dispatch FIFO
@@ -238,9 +328,16 @@ class ServeScheduler:
         self._dummy_levels: dict[int, object] = {}
         self._dummy_tails: dict[tuple, object] = {}
         self._next_rid = 0
+        self._next_dispatch = 0
+        self._attempts: dict[int, int] = {}     # rid -> failed dispatches
+        self._outstanding: dict[int, int] = {}  # bucket -> admitted, live
+        self._coord_dim = None                  # first-seen stream widths
+        self._feat_shape = None
+        self._has_deadlines = False
         # telemetry accumulators
         self._n_submitted = 0
         self._n_completed = 0
+        self._n_ok = 0                  # completed WITH predictions
         self._real_points = 0           # valid (unmasked) caller rows
         self._issued_rows = 0           # bucket rows issued to the device
         self._scenes = {}               # bucket -> real scenes executed
@@ -249,48 +346,141 @@ class ServeScheduler:
         self._latency_sum = 0.0
         self._assembly_s = 0.0          # host time spent assembling
         self._deadline_flushes = 0
+        self._fault_counts = {c: 0 for c in FLT.ERROR_CODES}
+        self._n_retries = 0             # retry dispatches issued
+        self._n_failed_dispatches = 0
+        self._last_failure_t = None
+        self._recovery_s = None         # last failure -> next good retire
+
+        if watchdog_s is None:
+            watchdog_s = max_wait_s / 4 if max_wait_s is not None else 0.0
+        self._watchdog = FT.Ticker(
+            max(_MIN_WATCHDOG_S, float(watchdog_s)), self._watchdog_tick,
+            name="serve-watchdog") if watchdog_s > 0 else None
 
     def max_batch_for(self, cap: int) -> int:
         """Micro-batch width of one capacity bucket."""
         return self.max_batch_overrides.get(cap, self.max_batch)
 
+    # -- lifecycle --------------------------------------------------------
+
+    def close(self) -> None:
+        """Drain in-flight work and stop the watchdog.
+
+        Queued scenes are executed (dummy-filled partial batches) and
+        every in-flight micro-batch retires, so completed results stay
+        drainable after close; the watchdog ticker thread is JOINED (no
+        leaked daemon threads).  Idempotent; a submit after close
+        completes with a `rejected` result instead of raising.
+        """
+        wd, self._watchdog = self._watchdog, None
+        if wd is not None:
+            wd.close()                  # join OUTSIDE the lock
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._expire_overdue_locked()
+            for cap in list(self._queues):
+                while self._queues[cap]:
+                    self._run_bucket(cap)
+            while self._retire_oldest_locked():
+                pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
     # -- admission --------------------------------------------------------
 
-    def submit(self, coords, feats, mask=None) -> int:
-        """Admit one scene; returns its request id.
+    def submit(self, coords, feats, mask=None,
+               deadline_s: float | None = None) -> int:
+        """Admit one scene; returns its request id — ALWAYS.
 
         `coords` (N, 1+D) int32, `feats` (N, C); `mask` defaults to all
-        rows valid.  The scene is padded to the smallest ladder bucket
-        holding N rows and queued with its bucket peers; a bucket that
-        reaches its `max_batch` width dispatches immediately (async —
-        the call returns while the micro-batch executes).  Thread-safe:
-        padding and digesting happen outside the lock, so concurrent
-        producers overlap their admission work.
+        rows valid.  The scene is validated up front (shapes, dtypes,
+        finite features, packed-key budget, ladder fit — see
+        `faults.validate_scene`); a scene that fails admission completes
+        immediately with a `rejected` result under the returned rid
+        instead of raising.  Accepted scenes are padded to the smallest
+        ladder bucket holding N rows and queued with their bucket peers;
+        a bucket that reaches its `max_batch` width dispatches
+        immediately (async — the call returns while the micro-batch
+        executes).  `deadline_s` bounds the QUEUE wait: a request still
+        queued that long later completes with a `timeout` result (a
+        request already dispatched runs to completion).  With
+        `max_backlog`, a submit into a backed-up bucket completes with a
+        `shed` result.  Thread-safe: padding and digesting happen
+        outside the lock, so concurrent producers overlap their
+        admission work.
         """
-        coords = np.asarray(coords)
-        n = coords.shape[0]
-        if mask is None:
-            mask = np.ones(n, bool)
-        cap = self.ladder.bucket_for(n)
-        c, m, f = BK.pad_scene(coords, mask, feats, cap)
-        key = None if self._legacy_assembly else \
-            self.engine.scene_key(c, m, cap)
-        n_valid = int(np.asarray(mask, bool).sum())
+        t_submit = time.monotonic()
+        if self.fault_plan is not None:
+            coords, feats, mask = self.fault_plan.on_submit(
+                coords, feats, mask)
+        err = None
+        n, cap = 0, -1
+        if self.validate:
+            try:
+                coords, mask, feats, n, cap = FLT.validate_scene(
+                    coords, feats, mask, self.ladder,
+                    check_key_budget=self._check_key_budget,
+                    coord_dim=self._coord_dim,
+                    feat_shape=self._feat_shape)
+            except FLT.AdmissionError as e:
+                err = e.as_error()
+        else:
+            # PR-5 behaviour (bench baseline): no validation, a ladder
+            # overflow raises out of submit()
+            coords = np.asarray(coords)
+            n = coords.shape[0]
+            if mask is None:
+                mask = np.ones(n, bool)
+            cap = self.ladder.bucket_for(n)
+        if err is None:
+            c, m, f = BK.pad_scene(coords, mask, feats, cap)
+            key = None if self._legacy_assembly else \
+                self.engine.scene_key(c, m, cap)
+            n_valid = int(np.asarray(mask, bool).sum())
+            deadline = t_submit + deadline_s \
+                if deadline_s is not None else None
         with self._lock:
-            req = ServeRequest(self._next_rid, c, m, f, n, n_valid, cap,
-                               time.monotonic(), key)
+            rid = self._next_rid
             self._next_rid += 1
             self._n_submitted += 1
+            if err is None and self._closed:
+                err = ServeError(FLT.REJECTED, "scheduler is closed")
+            if err is None and self.max_backlog is not None and \
+                    self._outstanding.get(cap, 0) >= self.max_backlog:
+                err = ServeError(
+                    FLT.SHED,
+                    f"bucket {cap} backlog at the max_backlog bound "
+                    f"({self.max_backlog} outstanding scenes)")
+            if err is not None:
+                self._complete_error_locked(rid, n, cap, t_submit, err)
+                return rid
+            if self._coord_dim is None:
+                self._coord_dim = int(coords.shape[1])
+                self._feat_shape = tuple(np.asarray(feats).shape[1:])
+            req = ServeRequest(rid, c, m, f, n, n_valid, cap,
+                               t_submit, key, deadline)
+            if deadline is not None:
+                self._has_deadlines = True
+            self._outstanding[cap] = self._outstanding.get(cap, 0) + 1
             self._queues.setdefault(cap, deque()).append(req)
             if len(self._queues[cap]) >= self.max_batch_for(cap):
                 self._run_bucket(cap)
             self._check_deadlines_locked()
-            return req.rid
+            return rid
 
     def poll(self) -> list[ServeResult]:
         """Non-blocking pipeline tick: deadline-flush overdue partial
-        buckets, retire in-flight micro-batches whose results are already
-        on host, and hand back everything completed so far."""
+        buckets, expire overdue requests, retire in-flight micro-batches
+        whose results are already on host, and hand back everything
+        completed so far."""
         with self._lock:
             self._check_deadlines_locked()
             while self._retire_oldest_locked(only_ready=True):
@@ -304,6 +494,7 @@ class ServeScheduler:
         with masked dummy scenes), wait for everything in flight, and
         return how many scenes ran."""
         with self._lock:
+            self._expire_overdue_locked()
             ran = 0
             for cap in list(self._queues):
                 while self._queues[cap]:
@@ -462,31 +653,51 @@ class ServeScheduler:
         return hits, (levels_b, coords_b, mask_b, feats_b)
 
     def _run_bucket(self, cap: int) -> int:
+        """Pop up to max_batch queued scenes and dispatch them (caller
+        holds the lock)."""
+        q = self._queues[cap]
+        mb = self.max_batch_for(cap)
+        reqs = [q.popleft() for _ in range(min(mb, len(q)))]
+        if not reqs:
+            return 0
+        return self._dispatch(reqs, cap, retries=0)
+
+    def _dispatch(self, reqs, cap: int, retries: int) -> int:
         """Assemble + dispatch one micro-batch (caller holds the lock).
 
         Dispatch is asynchronous: the jit call returns a future-like
         device array that is parked on the in-flight FIFO; completion
-        happens in drain()/poll()/flush()/take().  Once a bucket exceeds
-        `pipeline_depth` in-flight slots the oldest slots retire first
-        (double buffering) — with depth 0 the batch retires immediately
-        (synchronous PR-4 behaviour).
+        happens in drain()/poll()/flush()/take() (or the watchdog).
+        Once a bucket exceeds `pipeline_depth` in-flight slots the
+        oldest slots retire first (double buffering) — with depth 0 the
+        batch retires immediately (synchronous PR-4 behaviour).  Retry
+        dispatches (`retries > 0`) run partial batches at the SAME
+        (max_batch, capacity) shape with dummy fill, so failure recovery
+        never compiles a new program.  A dispatch that raises on the
+        spot (assembly or launch) goes straight to the failure-isolation
+        path instead of propagating.
         """
-        q = self._queues[cap]
         mb = self.max_batch_for(cap)
-        reqs = [q.popleft() for _ in range(min(mb, len(q)))]
         n_real = len(reqs)
-        if not n_real:
-            return 0
-
-        t0 = time.perf_counter()
-        if self._legacy_assembly:
-            hits, operands = self._assemble_legacy(reqs, cap, mb)
-        else:
-            hits, operands = self._assemble(reqs, cap, mb)
-        self._assembly_s += time.perf_counter() - t0
-
-        preds = self._apply(*operands)
-        self._inflight.append(_InFlight(cap, reqs, hits, preds))
+        did = self._next_dispatch
+        self._next_dispatch += 1
+        if retries:
+            self._n_retries += 1
+        try:
+            t0 = time.perf_counter()
+            if self._legacy_assembly:
+                hits, operands = self._assemble_legacy(reqs, cap, mb)
+            else:
+                hits, operands = self._assemble(reqs, cap, mb)
+            self._assembly_s += time.perf_counter() - t0
+            preds = self._apply(*operands)
+        except Exception as e:
+            self._on_slot_failed(
+                _InFlight(cap, list(reqs), [False] * n_real, None,
+                          did, retries), e)
+            return n_real
+        self._inflight.append(_InFlight(cap, list(reqs), hits, preds,
+                                        did, retries))
 
         self._real_points += sum(r.n_valid for r in reqs)
         self._issued_rows += mb * cap
@@ -506,6 +717,53 @@ class ServeScheduler:
                 self._retire_oldest_locked()
         return n_real
 
+    def _wait_slot(self, slot: _InFlight):
+        """Block for one slot's device results (runs WITHOUT the lock).
+        The fault plan's wait seam lives here: an injected delay or
+        failure behaves exactly like a slow or crashing device."""
+        if self.fault_plan is not None:
+            self.fault_plan.check_wait(slot.dispatch_id, slot.cap,
+                                       [r.rid for r in slot.reqs])
+        return jax.block_until_ready(slot.preds)
+
+    def _on_slot_failed(self, slot: _InFlight, exc: BaseException) -> None:
+        """Failure isolation (caller holds the lock): a failed
+        micro-batch never re-enters the FIFO to poison later retires.
+
+        Every real request on the slot gets another chance as a fresh
+        dispatch — bisected into halves when the batch held several
+        scenes (`retry_bisect`), so a single poison scene is isolated in
+        O(log max_batch) rounds while its neighbours complete normally —
+        and a request that has exhausted its `max_retries` re-dispatch
+        budget completes with a typed `exec_failed` result.  The
+        scheduler keeps serving either way.
+        """
+        self._n_failed_dispatches += 1
+        self._last_failure_t = time.monotonic()
+        retryable, dead = [], []
+        for r in slot.reqs:
+            a = self._attempts.get(r.rid, 0) + 1
+            self._attempts[r.rid] = a
+            (retryable if a <= self.max_retries else dead).append(r)
+        for r in dead:
+            self._attempts.pop(r.rid, None)
+            self._outstanding[slot.cap] = \
+                self._outstanding.get(slot.cap, 1) - 1
+            self._complete_error_locked(
+                r.rid, r.n_points, slot.cap, r.t_submit,
+                ServeError(FLT.EXEC_FAILED,
+                           f"micro-batch execution failed "
+                           f"{self.max_retries + 1}x; last error: {exc}"))
+        if not retryable:
+            return
+        if len(retryable) > 1 and self.retry_bisect:
+            mid = (len(retryable) + 1) // 2
+            groups = (retryable[:mid], retryable[mid:])
+        else:
+            groups = (retryable,)
+        for group in groups:
+            self._dispatch(group, slot.cap, slot.retries + 1)
+
     def _retire_oldest_locked(self, only_ready: bool = False) -> bool:
         """Retire the OLDEST in-flight micro-batch; returns False when
         there is nothing (eligible) to retire.
@@ -519,6 +777,13 @@ class ServeScheduler:
         scenes; `_retiring` serializes retirers on the FIFO head.  With
         `only_ready` the call never blocks: it retires only a head whose
         result is already on host (poll()'s non-blocking tick).
+
+        A wait that raises resolves the slot through the
+        failure-isolation path (`_on_slot_failed`: retry / bisect /
+        `exec_failed` results) — the slot is NOT re-queued, so one
+        failed execution can never poison every later retire.  Only
+        BaseExceptions that aren't Exceptions (KeyboardInterrupt,
+        SystemExit) re-queue the slot and propagate.
 
         Caller must hold the lock exactly once (every public entry point
         acquires it with one `with self._lock:` and internal helpers
@@ -535,35 +800,90 @@ class ServeScheduler:
         slot = self._inflight.popleft()
         self._retiring = True
         self._lock.release()
+        failure = None
         try:
-            preds = np.asarray(jax.block_until_ready(slot.preds))
+            preds = np.asarray(self._wait_slot(slot))
+        except Exception as e:
+            failure = e
         except BaseException:
             self._lock.acquire()
             self._retiring = False
-            # a failed execution must not orphan the batch: put the slot
-            # back at the head so its requests stay addressable (every
-            # later retire re-raises the same error rather than handing
-            # take()/segment_batch a silent KeyError)
+            # interpreter-level interrupt: put the slot back at the head
+            # so its requests stay addressable, and propagate
             self._inflight.appendleft(slot)
             self._retire_cv.notify_all()
             raise
         self._lock.acquire()
         self._retiring = False
         self._retire_cv.notify_all()
+        if failure is not None:
+            self._on_slot_failed(slot, failure)
+            return True                 # the slot WAS resolved
         t_done = time.monotonic()
+        if self._last_failure_t is not None:
+            self._recovery_s = t_done - self._last_failure_t
+            self._last_failure_t = None
         for i, r in enumerate(slot.reqs):
             lat = t_done - r.t_submit
+            self._attempts.pop(r.rid, None)
+            self._outstanding[slot.cap] = \
+                self._outstanding.get(slot.cap, 1) - 1
             self._completed.append(ServeResult(
                 r.rid, preds[i, :r.n_points].astype(np.int32), r.n_points,
                 slot.cap, 1.0 - r.n_valid / slot.cap, bool(slot.hits[i]),
                 lat))
             self._latency_sum += lat
         self._n_completed += len(slot.reqs)
+        self._n_ok += len(slot.reqs)
         return True
 
+    # -- failure completion / deadlines -----------------------------------
+
+    def _complete_error_locked(self, rid: int, n_points: int, bucket: int,
+                               t_submit: float, err: ServeError) -> None:
+        """Terminate one request with a typed error result."""
+        self._completed.append(ServeResult(
+            rid, None, int(n_points), int(bucket), 0.0, False,
+            time.monotonic() - t_submit, err))
+        self._n_completed += 1
+        self._fault_counts[err.code] += 1
+
+    def _expire_overdue_locked(self) -> None:
+        """Convert queued requests whose `deadline_s` elapsed into
+        `timeout` results (a dispatched request runs to completion —
+        device work cannot be cancelled)."""
+        if not self._has_deadlines:
+            return
+        now = time.monotonic()
+        live = 0
+        for cap in list(self._queues):
+            q = self._queues[cap]
+            if any(r.deadline is not None for r in q):
+                keep = deque()
+                for r in q:
+                    if r.deadline is not None and now >= r.deadline:
+                        self._attempts.pop(r.rid, None)
+                        self._outstanding[cap] = \
+                            self._outstanding.get(cap, 1) - 1
+                        self._complete_error_locked(
+                            r.rid, r.n_points, cap, r.t_submit,
+                            ServeError(
+                                FLT.TIMEOUT,
+                                f"deadline_s exceeded after "
+                                f"{now - r.t_submit:.3f}s in queue"))
+                    else:
+                        keep.append(r)
+                self._queues[cap] = keep
+            live += sum(1 for r in self._queues[cap]
+                        if r.deadline is not None)
+        self._has_deadlines = live > 0
+
     def _check_deadlines_locked(self) -> None:
-        """max_wait_s policy: a partial micro-batch executes once its
-        oldest queued request exceeds the deadline."""
+        """Deadline policies: expire overdue requests (`deadline_s` ->
+        `timeout` results), then the max_wait_s flush — a partial
+        micro-batch executes once its oldest queued request exceeds the
+        batching deadline."""
+        self._expire_overdue_locked()
         if self.max_wait_s is None:
             return
         now = time.monotonic()
@@ -573,12 +893,27 @@ class ServeScheduler:
                 self._deadline_flushes += 1
                 self._run_bucket(cap)
 
+    def _watchdog_tick(self) -> None:
+        """Background completion (the `watchdog_s` Ticker): fire
+        `max_wait_s` deadline flushes, expire per-request deadlines, and
+        retire already-ready slots on an idle scheduler — so results
+        complete without anyone calling poll(), and poll() itself stays
+        constant-time."""
+        with self._lock:
+            if self._closed:
+                return
+            self._check_deadlines_locked()
+            while self._retire_oldest_locked(only_ready=True):
+                pass
+
     # -- telemetry --------------------------------------------------------
 
     def stats(self) -> dict:
         """Serving telemetry: padding overhead, mapping + assembly cache
         hit rates, assembly time, per-bucket occupancy, deadline flushes,
-        pipeline state, compile counts, latency."""
+        pipeline state, compile counts, latency, and the fault counters
+        (rejected / shed / timeout / exec_failed, failed dispatches,
+        retries, last failure->recovery time)."""
         with self._lock:
             buckets = {}
             for cap in self._batches:
@@ -597,6 +932,7 @@ class ServeScheduler:
             return {
                 "n_submitted": self._n_submitted,
                 "n_completed": self._n_completed,
+                "n_ok": self._n_ok,
                 "queue_depth": sum(len(q) for q in self._queues.values()),
                 "in_flight": len(self._inflight),
                 "padding_overhead": overhead,
@@ -617,6 +953,14 @@ class ServeScheduler:
                     "build": _jit_cache_size(self.engine._build),
                     "apply_batch": _jit_cache_size(self._apply),
                 },
-                "latency_avg_s": (self._latency_sum / self._n_completed
-                                  if self._n_completed else 0.0),
+                "latency_avg_s": (self._latency_sum / self._n_ok
+                                  if self._n_ok else 0.0),
+                "faults": {
+                    **self._fault_counts,
+                    "failed_dispatches": self._n_failed_dispatches,
+                    "retries": self._n_retries,
+                    "recovery_s": self._recovery_s,
+                },
+                "watchdog": self._watchdog is not None,
+                "closed": self._closed,
             }

@@ -1,0 +1,418 @@
+"""Fault-tolerant serving runtime: the error taxonomy and admission
+validation (serve/faults.py), the scheduler's failure-isolation policies
+(rejected / shed / timeout / exec_failed results, retry + bisect poison
+isolation, bounded backlog, per-request deadlines), the background
+watchdog + close() lifecycle (launch/fault_tolerance.py Ticker), and
+`segment_batch`'s per-scene error surfacing.  The end-to-end chaos test
+(concurrent producers + injected FaultPlan) lives in
+tests/test_serve_scheduler.py."""
+
+import time
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import mapping as M
+from repro.core import packed as PK
+from repro.data.synthetic import lidar_scene
+from repro.launch.fault_tolerance import Heartbeat, Ticker
+from repro.models import minkunet as MU
+from repro.serve import faults as FLT
+from repro.serve.buckets import BucketLadder, geometric_ladder
+from repro.serve.engine import PointCloudEngine
+from repro.serve.faults import (AdmissionError, FaultPlan, InjectedFault,
+                                ServeError, validate_scene)
+from repro.serve.scheduler import ServeScheduler
+
+
+def _mini_params(n_classes=2):
+    return MU.mini_minkunet_init(jax.random.key(0), c_in=4,
+                                 n_classes=n_classes)
+
+
+def _ref_preds(params, coords, mask, feats, flow="fod"):
+    pc = M.make_point_cloud(jnp.asarray(coords), jnp.asarray(mask))
+    logits = MU.minkunet_apply(params, pc, jnp.asarray(feats), flow=flow)
+    return np.asarray(jnp.argmax(logits, -1))
+
+
+def _scene_cf(seed, n):
+    c, m, f = lidar_scene(seed=140 + seed, n_points=n, grid=16)
+    return c, f, m
+
+
+@pytest.fixture(scope="module")
+def served():
+    """(params, engine) shared across the suite — every test builds its
+    own ServeScheduler (policy under test) over the same compiled
+    programs, so the suite pays the jit cost once."""
+    # this module sits late in the full run and compiles fresh full-model
+    # programs; drop executables accumulated by earlier modules so the
+    # CPU backend's JIT doesn't run out of code space mid-compile
+    jax.clear_caches()
+    params = _mini_params()
+    engine = PointCloudEngine(params, n_stages=2, flow="fod",
+                              ladder=geometric_ladder(64, 128))
+    return params, engine
+
+
+# ---------------------------------------------------------------------------
+# taxonomy + validation units (no engine)
+# ---------------------------------------------------------------------------
+
+def test_serve_error_taxonomy():
+    err = ServeError(FLT.EXEC_FAILED, "boom")
+    assert str(err) == "[exec_failed] boom"
+    with pytest.raises(ValueError, match="unknown serve error code"):
+        ServeError("oom", "nope")
+    adm = AdmissionError("bad scene")
+    assert isinstance(adm, ValueError)
+    e = adm.as_error()
+    assert e.code == FLT.REJECTED and e.message == "bad scene"
+    assert set(FLT.ERROR_CODES) == {"rejected", "timeout", "shed",
+                                    "exec_failed"}
+
+
+def test_validate_scene_rejections():
+    ladder = BucketLadder((64, 128))
+    c, f, m = _scene_cf(0, 40)
+
+    def reject(match, **kw):
+        args = {"coords": c, "feats": f, "mask": m, "ladder": ladder}
+        args.update(kw)
+        with pytest.raises(AdmissionError, match=match):
+            validate_scene(args["coords"], args["feats"], args["mask"],
+                           args["ladder"])
+
+    # the happy path round-trips and resolves the bucket
+    vc, vm, vf, n, cap = validate_scene(c, f, m, ladder)
+    assert (n, cap) == (40, 64)
+    np.testing.assert_array_equal(vc, c)
+
+    reject("must be", coords=c[:, 0])                   # 1-D coords
+    reject("does not match", feats=f[:-1])              # ragged feats
+    reject("does not match", mask=m[:-1])               # ragged mask
+    reject("not integer-compatible",
+           coords=c.astype(np.complex64))
+    reject("NaN/Inf", coords=np.where(c == c[0, 0], np.nan,
+                                      c.astype(np.float32)))
+    bad_f = f.copy()
+    bad_f[np.flatnonzero(m)[0]] = np.nan        # NaN on a VALID row
+    reject("NaN/Inf", feats=bad_f)
+    # NaN on a MASKED row is fine — the row never enters a kernel
+    masked_f = f.copy()
+    dead = np.flatnonzero(~m)
+    if dead.size:
+        masked_f[dead[0]] = np.nan
+        validate_scene(c, masked_f, m, ladder)
+    reject("exceeds the bucket ladder", coords=np.tile(c, (5, 1)),
+           feats=np.tile(f, (5, 1)), mask=np.tile(m, 5))
+
+    # packed-key budget: spatial overflow and batch-index overflow on a
+    # VALID row (masked rows are exempt — they never reach a key)
+    row = np.flatnonzero(m)[0]
+    over = c.astype(np.int64)
+    over[row, 1] = PK.COORD_MAX + 1
+    with pytest.raises(AdmissionError, match="packed-key budget"):
+        validate_scene(over, f, m, ladder)
+    bad_batch = c.astype(np.int64)
+    bad_batch[row, 0] = PK.BATCH_MAX + 1
+    with pytest.raises(AdmissionError, match="packed-key budget"):
+        validate_scene(bad_batch, f, m, ladder)
+    # ... but the v1 engine has no key budget
+    validate_scene(over, f, m, ladder, check_key_budget=False)
+
+    # stream-consistency pins (first-seen widths from the scheduler)
+    with pytest.raises(AdmissionError, match="stream"):
+        validate_scene(c, f, m, ladder, coord_dim=5)
+    with pytest.raises(AdmissionError, match="stream"):
+        validate_scene(c, f, m, ladder, feat_shape=(f.shape[1] + 1,))
+
+    # mask=None defaults to all-valid
+    _, vm, _, _, _ = validate_scene(c, f, None, ladder)
+    assert vm.all() and vm.shape == (40,)
+
+
+def test_fault_plan_seams():
+    plan = FaultPlan(fail_dispatches={1}, poison_rids={7},
+                     corrupt_scenes={0}, delay_buckets={64: 0.01})
+    c, f, m = _scene_cf(1, 8)
+    _, cf, _ = plan.on_submit(c, f, m)          # ordinal 0: corrupted
+    assert np.isnan(cf).any() and not np.isnan(f).any()
+    _, cf2, _ = plan.on_submit(c, f, m)         # ordinal 1: untouched
+    assert not np.isnan(np.asarray(cf2, np.float32)).any()
+
+    plan.check_wait(0, 128, [1, 2])             # clean dispatch
+    t0 = time.monotonic()
+    with pytest.raises(InjectedFault, match="dispatch 1"):
+        plan.check_wait(1, 64, [3])             # planned failure + delay
+    assert time.monotonic() - t0 >= 0.01
+    with pytest.raises(InjectedFault, match="poisoned"):
+        plan.check_wait(5, 128, [6, 7])         # poisoned rid
+    assert plan.stats() == {"submits_seen": 2, "scenes_corrupted": 1,
+                            "failures_injected": 2, "delays_injected": 1}
+
+
+def test_ticker_and_heartbeat_close_join():
+    """Satellite bugfix: close() JOINS the watcher thread — no daemon
+    threads leak past their owner."""
+    ticks = []
+    with Ticker(0.01, lambda: ticks.append(1), name="t-test") as t:
+        time.sleep(0.05)
+        assert t.alive
+    assert not t.alive and len(ticks) >= 1      # joined on exit
+    n = len(ticks)
+    time.sleep(0.03)
+    assert len(ticks) == n                      # really stopped
+    with pytest.raises(ValueError, match="interval"):
+        Ticker(0.0, lambda: None)
+
+    # a tick that raises is swallowed; the ticker keeps ticking
+    boom = []
+    t2 = Ticker(0.01, lambda: boom.append(1) or (_ for _ in ()).throw(
+        RuntimeError("tick boom")))
+    time.sleep(0.05)
+    t2.close()
+    assert len(boom) >= 2 and not t2.alive
+
+    stalls = []
+    hb = Heartbeat(stall_s=0.04, on_stall=stalls.append)
+    time.sleep(0.08)                            # no beat() -> stall fires
+    assert stalls and stalls[0] > 0.04
+    hb.beat()
+    hb.close()
+    assert not hb._ticker.alive                 # joined, not abandoned
+
+
+# ---------------------------------------------------------------------------
+# scheduler failure policies
+# ---------------------------------------------------------------------------
+
+def test_submit_rejects_malformed_scenes_without_raising(served):
+    """Admission control: NaN feats, ragged shapes, oversized scenes and
+    mixed stream widths all complete as `rejected` results; the stream
+    keeps serving and every submit is counted."""
+    params, engine = served
+    sched = ServeScheduler(engine, max_batch=2, mesh=None)
+    c, f, m = _scene_cf(2, 40)
+
+    bad_f = f.copy()
+    bad_f[m.argmax()] = np.nan                  # NaN on a VALID row
+    r1 = sched.take([sched.submit(c, bad_f, m)]).popitem()[1]
+    assert r1.error.code == "rejected" and "NaN" in r1.error.message
+    r2 = sched.take([sched.submit(c, f[:-1], m)]).popitem()[1]
+    assert r2.error.code == "rejected"
+    r3 = sched.take([sched.submit(*_scene_cf(3, 4000))]).popitem()[1]
+    assert "exceeds the bucket ladder" in r3.error.message
+
+    # a good scene pins the stream widths ...
+    good = sched.submit(c, f, m)
+    sched.flush()
+    ok = sched.take([good])[good]
+    assert ok.ok and ok.error is None
+    np.testing.assert_array_equal(ok.preds, _ref_preds(params, c, m, f))
+    # ... and a different-width scene is now refused
+    r4 = sched.take([sched.submit(c[:, :3], f, m)]).popitem()[1]
+    assert r4.error.code == "rejected" and "stream" in r4.error.message
+
+    st = sched.stats()
+    assert st["n_submitted"] == 5 and st["n_completed"] == 5
+    assert st["n_ok"] == 1 and st["faults"]["rejected"] == 4
+
+
+def test_shed_policy_bounds_per_bucket_backlog(served):
+    """max_backlog: a submit into a backed-up bucket completes with a
+    `shed` result (reject-newest); completions free the budget."""
+    params, engine = served
+    sched = ServeScheduler(engine, max_batch=2, mesh=None,
+                           pipeline_depth=2, max_backlog=2)
+    a, b, cst = _scene_cf(4, 40), _scene_cf(5, 40), _scene_cf(6, 40)
+    r1 = sched.submit(*a)
+    r2 = sched.submit(*b)                       # fills the bucket: parked
+    r3 = sched.submit(*cst)                     # backlog 2 >= 2: shed
+    out = sched.take([r1, r2, r3])
+    assert out[r1].ok and out[r2].ok
+    assert out[r3].error.code == "shed"
+    assert "max_backlog" in out[r3].error.message
+    np.testing.assert_array_equal(out[r1].preds,
+                                  _ref_preds(params, *a[::2], a[1]))
+    # budget freed: the same scene is admitted now
+    r4 = sched.submit(*cst)
+    sched.flush()
+    assert sched.take([r4])[r4].ok
+    st = sched.stats()
+    assert st["faults"]["shed"] == 1 and st["n_ok"] == 3
+
+
+def test_deadline_s_times_out_overdue_queued_requests(served):
+    """Per-request deadline_s: still queued past its deadline -> a
+    `timeout` result; peers without a deadline keep waiting."""
+    params, engine = served
+    sched = ServeScheduler(engine, max_batch=4, mesh=None, watchdog_s=0)
+    a, b = _scene_cf(7, 40), _scene_cf(8, 40)
+    r1 = sched.submit(*a, deadline_s=0.01)
+    r2 = sched.submit(*b)                       # no deadline
+    time.sleep(0.03)
+    polled = {r.rid: r for r in sched.poll()}   # expiry runs here
+    st = sched.stats()
+    assert st["faults"]["timeout"] == 1 and st["queue_depth"] == 1
+    sched.flush()
+    out = {**polled, **sched.take([r1, r2])}
+    assert out[r1].error.code == "timeout"
+    assert "deadline_s" in out[r1].error.message
+    assert out[r2].ok
+    np.testing.assert_array_equal(out[r2].preds,
+                                  _ref_preds(params, b[0], b[2], b[1]))
+
+
+def test_transient_dispatch_failure_retries_bit_identical(served):
+    """A one-shot dispatch failure is retried transparently: the FIFO is
+    NOT poisoned, every request completes with predictions bit-identical
+    to the fault-free reference, and the fault counters record it."""
+    params, engine = served
+    plan = FaultPlan(fail_dispatches={0})
+    sched = ServeScheduler(engine, max_batch=2, mesh=None,
+                           fault_plan=plan)
+    scenes = [_scene_cf(i, 40) for i in (9, 10)]
+    out = sched.serve(scenes)
+    assert all(r.ok for r in out.values())
+    for rid, (c, f, m) in zip(sorted(out), scenes):
+        np.testing.assert_array_equal(out[rid].preds,
+                                      _ref_preds(params, c, m, f))
+    st = sched.stats()["faults"]
+    assert st["failed_dispatches"] == 1 and st["exec_failed"] == 0
+    assert st["retries"] == 2                   # bisected into singles
+    assert st["recovery_s"] is not None and st["recovery_s"] >= 0
+    assert plan.stats()["failures_injected"] == 1
+
+
+def test_poison_scene_isolated_by_bisect(served):
+    """A scene that fails EVERY dispatch containing it is bisected away:
+    its batch peers complete with bit-identical predictions, the poison
+    request itself completes `exec_failed` after exhausting max_retries,
+    and the scheduler serves the next stream cleanly."""
+    params, engine = served
+    # rids are scheduler-local and start at 0: poison the second request
+    plan = FaultPlan(poison_rids={1})
+    sched = ServeScheduler(engine, max_batch=4, mesh=None,
+                           fault_plan=plan)
+    scenes = [_scene_cf(20 + i, 40) for i in range(4)]
+    out = sched.serve(scenes)
+    assert out[1].error.code == "exec_failed"
+    assert "injected" in out[1].error.message
+    for rid, (c, f, m) in zip(sorted(out), scenes):
+        if rid == 1:
+            continue
+        assert out[rid].ok
+        np.testing.assert_array_equal(out[rid].preds,
+                                      _ref_preds(params, c, m, f))
+    st = sched.stats()["faults"]
+    # batch fails, [0,1] half fails, [1] single fails -> dead
+    assert st["exec_failed"] == 1
+    assert st["failed_dispatches"] == 3
+    assert st["retries"] == 4                   # 2 halves + 2 singles
+    # the follow-up stream is clean (no poisoned rid outstanding)
+    follow = _scene_cf(30, 40)
+    out2 = sched.serve([follow])
+    (res,) = out2.values()
+    assert res.ok
+    np.testing.assert_array_equal(
+        res.preds, _ref_preds(params, follow[0], follow[2], follow[1]))
+
+
+def test_retry_disabled_completes_exec_failed(served):
+    """max_retries=0: a failed slot's requests complete immediately as
+    `exec_failed` — no retry dispatches at all."""
+    _, engine = served
+    plan = FaultPlan(fail_dispatches={0})
+    sched = ServeScheduler(engine, max_batch=2, mesh=None,
+                           fault_plan=plan, max_retries=0)
+    out = sched.serve([_scene_cf(i, 40) for i in (11, 12)])
+    assert all(r.error.code == "exec_failed" for r in out.values())
+    st = sched.stats()["faults"]
+    assert st["retries"] == 0 and st["exec_failed"] == 2
+    with pytest.raises(ValueError, match="max_retries"):
+        ServeScheduler(engine, mesh=None, max_retries=-1)
+    with pytest.raises(ValueError, match="max_backlog"):
+        ServeScheduler(engine, mesh=None, max_backlog=0)
+
+
+def test_watchdog_background_completion_and_join(served):
+    """The watchdog (auto-enabled with max_wait_s) fires the deadline
+    flush and retires the slot with NOBODY calling poll(); close() joins
+    the ticker thread."""
+    params, engine = served
+    sched = ServeScheduler(engine, max_batch=4, mesh=None,
+                           max_wait_s=0.05)
+    assert sched.stats()["watchdog"]
+    c, f, m = _scene_cf(13, 40)
+    rid = sched.submit(c, f, m)
+    deadline = time.monotonic() + 60.0          # ample for a cold compile
+    while sched.stats()["n_completed"] < 1:     # stats() never executes
+        assert time.monotonic() < deadline, "watchdog never completed it"
+        time.sleep(0.02)
+    st = sched.stats()
+    assert st["deadline_flushes"] >= 1 and st["in_flight"] == 0
+    res = sched.take([rid])[rid]
+    np.testing.assert_array_equal(res.preds, _ref_preds(params, c, m, f))
+    wd = sched._watchdog
+    assert wd.alive
+    sched.close()
+    assert not wd.alive and sched._watchdog is None
+
+
+def test_close_context_manager_drains_and_rejects_late_submits(served):
+    """close()/__exit__: queued scenes execute, in-flight work retires,
+    results stay drainable; a submit after close completes `rejected`;
+    close is idempotent."""
+    params, engine = served
+    with ServeScheduler(engine, max_batch=4, mesh=None,
+                        max_wait_s=5.0) as sched:
+        c, f, m = _scene_cf(14, 40)
+        rid = sched.submit(c, f, m)             # partial: still queued
+    st = sched.stats()
+    assert st["closed"] and st["queue_depth"] == 0 and st["in_flight"] == 0
+    res = sched.take([rid])[rid]                # drainable after close
+    assert res.ok
+    np.testing.assert_array_equal(res.preds, _ref_preds(params, c, m, f))
+    late = sched.submit(c, f, m)
+    out = sched.take([late])[late]
+    assert out.error.code == "rejected" and "closed" in out.error.message
+    sched.close()                               # idempotent
+
+
+# ---------------------------------------------------------------------------
+# engine surface
+# ---------------------------------------------------------------------------
+
+def test_segment_batch_surfaces_per_scene_errors():
+    """PointCloudEngine.segment_batch: on_error='partial' returns the
+    typed error per failed scene with -1-filled rows; the default raises
+    a RuntimeError naming the scenes; the engine-level fault_plan reaches
+    the internal scheduler."""
+    params = _mini_params()
+    # ordinals are plan-global: corrupt the 2nd scene of BOTH calls
+    plan = FaultPlan(corrupt_scenes={1, 3})
+    engine = PointCloudEngine(params, n_stages=2, flow="fod",
+                              ladder=geometric_ladder(64, 64),
+                              max_batch=2, fault_plan=plan)
+    scenes = [lidar_scene(seed=160 + i, n_points=40, grid=16)
+              for i in range(2)]
+    coords = np.stack([c for c, _, _ in scenes])
+    mask = np.stack([m for _, m, _ in scenes])
+    feats = np.stack([f for _, _, f in scenes])
+
+    preds, hit, errors = engine.segment_batch(coords, mask, feats,
+                                              on_error="partial")
+    assert set(errors) == {1} and errors[1].code == "rejected"
+    assert (np.asarray(preds[1]) == -1).all()
+    c, m, f = scenes[0]
+    np.testing.assert_array_equal(np.asarray(preds[0]),
+                                  _ref_preds(params, c, m, f))
+
+    with pytest.raises(RuntimeError, match="scene 1.*rejected"):
+        engine.segment_batch(coords, mask, feats)
+    with pytest.raises(ValueError, match="on_error"):
+        engine.segment_batch(coords, mask, feats, on_error="ignore")

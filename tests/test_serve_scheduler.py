@@ -9,7 +9,12 @@ FIFO retirement, thread-safe submit under concurrent producers,
 deadline-aware flush, per-bucket max_batch overrides, and bit-identical
 parity with the synchronous (PR-4) path.  The shard_map-sharded executor
 is covered on a mocked multi-device mesh in tests/test_distributed.py;
-here the same code degrades to the single-device vmapped path."""
+here the same code degrades to the single-device vmapped path.
+
+The fault-tolerance layer (admission rejection, shed, deadline timeout,
+retry/bisect isolation, watchdog, close()) has its own unit suite in
+tests/test_serve_faults.py; THIS file holds the end-to-end chaos test —
+concurrent producers through an injected FaultPlan."""
 
 import threading
 import time
@@ -256,8 +261,16 @@ def test_scheduler_serve_convenience_and_ladder_overflow():
     sched = ServeScheduler(engine, max_batch=2, mesh=None)
     out = sched.serve([_scene_cf(i, n) for i, n in enumerate((30, 80))])
     assert set(out) == {0, 1}
-    with pytest.raises(ValueError, match="exceeds the bucket ladder"):
-        sched.submit(*_scene_cf(9, 400))
+    # regression (ISSUE-6 satellite): an oversized scene no longer leaks
+    # ValueError out of submit() — it completes as a typed `rejected`
+    # result and IS counted as submitted
+    rid = sched.submit(*_scene_cf(9, 400))
+    res = sched.take([rid])[rid]
+    assert not res.ok and res.preds is None
+    assert res.error.code == "rejected"
+    assert "exceeds the bucket ladder" in res.error.message
+    st = sched.stats()
+    assert st["n_submitted"] == 3 and st["faults"]["rejected"] == 1
     with pytest.raises(ValueError, match="max_batch"):
         ServeScheduler(engine, max_batch=0, mesh=None)
 
@@ -589,8 +602,11 @@ def test_deadline_flush_runs_overdue_partial_batch():
     params = _mini_params()
     engine = PointCloudEngine(params, n_stages=2, flow="fod",
                               ladder=geometric_ladder(64, 64))
+    # watchdog_s=0 keeps the firing synchronous (in poll()) for a
+    # deterministic count; background firing is covered in
+    # test_serve_faults.py
     sched = ServeScheduler(engine, max_batch=4, mesh=None,
-                           max_wait_s=0.05)
+                           max_wait_s=0.05, watchdog_s=0)
     c, f, m = _scene_cf(0, 40)
     rid = sched.submit(c, f, m)                 # 1/4: queued, not overdue
     assert sched.stats()["deadline_flushes"] == 0
@@ -634,6 +650,91 @@ def test_per_bucket_max_batch_overrides_and_ladder_config():
     assert max_batch_from_occupancy(
         {64: {"scenes": 2, "batches": 2}, 128: {"scenes": 7, "batches": 2}},
         default=4) == {64: 1, 128: 4}
+
+
+# ---------------------------------------------------------------------------
+# chaos: concurrent producers through an injected FaultPlan
+# ---------------------------------------------------------------------------
+
+def test_chaos_concurrent_producers_with_injected_faults():
+    """ISSUE-6 acceptance: concurrent producers stream mixed-size scenes
+    through an injected FaultPlan (1 transient dispatch failure + 1
+    NaN-corrupted scene + 1 oversized scene).  Every submitted rid
+    resolves to predictions or a typed error, no exception escapes
+    submit/flush/drain/serve, every surviving prediction is bit-identical
+    to the fault-free per-scene reference, and the scheduler serves a
+    clean follow-up stream afterwards."""
+    from repro.serve.faults import FaultPlan
+
+    # this test compiles several fresh full-model programs late in the
+    # suite; drop the session's accumulated executables first so the
+    # CPU backend's JIT doesn't run out of code space mid-compile
+    jax.clear_caches()
+    params = _mini_params()
+    engine = PointCloudEngine(params, n_stages=2, flow="fod",
+                              ladder=geometric_ladder(64, 128))
+    plan = FaultPlan(fail_dispatches={0},   # first micro-batch wait fails
+                     corrupt_scenes={5})    # 6th submit gets NaN feats
+    sched = ServeScheduler(engine, max_batch=2, mesh=None,
+                           fault_plan=plan)
+    submitted = []
+
+    def producer(t):
+        for j in range(4):
+            scene = _scene_cf(4 * t + j, 40 if j % 2 else 90)
+            # rid pairs with its scene via locals; list.append is atomic
+            submitted.append((sched.submit(*scene), scene))
+
+    threads = [threading.Thread(target=producer, args=(t,))
+               for t in range(3)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    # oversized scene last (its submit ordinal can't collide with the
+    # corrupt_scenes ordinal, which lands on a producer submit)
+    big_rid = sched.submit(*_scene_cf(99, 400))
+    submitted.append((big_rid, None))
+    sched.flush()
+    results = {r.rid: r for r in sched.drain()}
+
+    # every rid completed, exactly once, with preds XOR a typed error
+    assert sorted(results) == sorted(rid for rid, _ in submitted)
+    errors = {rid: r.error for rid, r in results.items()
+              if r.error is not None}
+    assert results[big_rid].error.code == "rejected"
+    assert len(errors) == 2                 # corrupted + oversized
+    assert all(e.code == "rejected" for e in errors.values())
+    # surviving predictions are bit-identical to the no-fault reference
+    # (per-scene vmap independence: the retried composition can't leak)
+    n_ok = 0
+    for rid, scene in submitted:
+        if rid in errors:
+            continue
+        c, f, m = scene
+        np.testing.assert_array_equal(results[rid].preds,
+                                      _ref_preds(params, c, m, f))
+        n_ok += 1
+    assert n_ok == 11
+
+    st = sched.stats()
+    assert st["n_submitted"] == 13 and st["n_completed"] == 13
+    assert st["faults"]["rejected"] == 2
+    assert st["faults"]["exec_failed"] == 0  # transient failure retried
+    assert st["faults"]["failed_dispatches"] == 1
+    assert st["faults"]["retries"] >= 1
+    assert st["faults"]["recovery_s"] is not None
+    assert plan.stats()["failures_injected"] == 1
+    assert plan.stats()["scenes_corrupted"] == 1
+
+    # the stream survives: a clean follow-up batch serves normally
+    follow = [_scene_cf(200 + i, 40) for i in range(2)]
+    out = sched.serve(follow)
+    assert len(out) == 2
+    for rid, (c, f, m) in zip(sorted(out), follow):
+        assert out[rid].ok
+        np.testing.assert_array_equal(out[rid].preds,
+                                      _ref_preds(params, c, m, f))
 
 
 def test_engine_batched_levels_cache_per_scene():
