@@ -33,6 +33,25 @@ The fault-tolerance PR adds two rows on the same stream:
                          successful retire (the retry/bisect pipeline
                          restart cost), with the failure counters
 
+The multi-worker router PR adds two more rows:
+
+  serve/router_overhead  single-worker `ServeRouter` vs the bare
+                         scheduler it fronts, same stream.  The router
+                         adds one routing hop per scene (affinity
+                         digest + rendezvous ranking + inbox handoff);
+                         like serve/ft_overhead, the asserted number is
+                         that hop timed directly against the per-scene
+                         latency (an end-to-end A/B delta of a ~1-2%
+                         effect drowns in +-20% host drift and is
+                         reported informationally only).  Acceptance:
+                         <= 5%, asserted in the full run after a
+                         bit-identity parity check.
+  serve/failover_recovery  2-worker router, one worker killed by an
+                         injected fault mid-stream on warm engines:
+                         worker death -> last replayed victim completed
+                         (the failover + replay pipeline cost, no
+                         compile in the path)
+
 Per-request predictions are asserted bit-identical between the paths
 before any row is emitted.
 """
@@ -237,6 +256,118 @@ def bench_fault_tolerance(n_points: int, reps: int, windows: int,
     return overhead
 
 
+def bench_router(n_points: int, reps: int, windows: int,
+                 max_batch: int = 4, assert_overhead: bool = True):
+    """serve/router_overhead + serve/failover_recovery: the
+    digest-affinity router's no-fault cost over the bare scheduler
+    (single worker, bit-identity asserted first) and the time a
+    worker-kill failover takes to make the stream whole on warm
+    engines."""
+    import itertools
+
+    from repro.serve.faults import FaultPlan
+    from repro.serve.router import ServeRouter
+
+    params = MU.minkunet_init(jax.random.key(0), c_in=4, n_classes=4,
+                              stem=8, enc_planes=(8, 16),
+                              dec_planes=(16, 8), blocks_per_stage=1)
+    scenes = [lidar_scene(seed=21 + i, n_points=n_points, grid=32)
+              for i in range(max_batch)]
+
+    def engine():
+        return PointCloudEngine(params, n_stages=2, flow="fod",
+                                ladder=BucketLadder((n_points,)),
+                                max_batch=max_batch, mesh=None)
+
+    # routers cycle a 2-engine pool: workers of one router get distinct
+    # engines, successive routers reuse them warm (jit caches persist)
+    pool = [engine(), engine()]
+    counter = itertools.count()
+
+    def factory():
+        return pool[next(counter) % len(pool)]
+
+    bare = ServeScheduler(engine(), max_batch=max_batch, mesh=None)
+    router = ServeRouter(factory, 1, max_batch=max_batch, mesh=None)
+
+    # parity first (doubles as warmup): the 1-worker router must be
+    # bit-identical to the bare scheduler
+    ref = _stream_once(bare, scenes)
+    got = router.serve([(c, f, m) for (c, m, f) in scenes])
+    for rid, brid in zip(sorted(got), sorted(ref)):
+        np.testing.assert_array_equal(ref[brid].preds, got[rid].preds)
+
+    def _router_window_us():
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            for (c, m, f) in scenes:
+                router.submit(c, f, m)
+        router.flush()
+        n = len(router.drain())
+        return (time.perf_counter() - t0) * 1e6 / n
+
+    bare_w, rout_w = [], []
+    for _ in range(windows):
+        bare_w.append(_window_us(bare, scenes, reps))
+        rout_w.append(_router_window_us())
+    bare_us = float(np.median(bare_w))
+    rout_us = float(np.median(rout_w))
+    e2e_delta = rout_us / bare_us - 1.0
+
+    # the router's per-scene addition is the routing hop: affinity
+    # digest + rendezvous ranking (preview IS that hop; the remaining
+    # handoff is a deque append + condition notify).  Time it directly
+    # — the e2e A/B delta above is drift-dominated and informational.
+    c0, m0, _ = scenes[0]
+    n_hop = 300
+    t0 = time.perf_counter()
+    for _ in range(n_hop):
+        router.preview(c0, m0)
+    hop_us = (time.perf_counter() - t0) * 1e6 / n_hop
+    overhead = hop_us / bare_us
+    emit("serve/router_overhead", overhead * 100,
+         f"hop_us={hop_us:.1f};bare_us={bare_us:.0f};"
+         f"router_us={rout_us:.0f};e2e_delta_pct={e2e_delta * 100:.1f};"
+         f"parity=ok;workers=1;target_pct=5")
+    router.close()
+    bare.close()
+
+    # failover recovery: routing is deterministic, so probe which worker
+    # the stream loads most, then kill it on its 2nd request of a fresh
+    # (warm-engine) run and measure death -> stream made whole
+    probe = ServeRouter(factory, 2, max_batch=max_batch, mesh=None)
+    probe.serve([(c, f, m) for (c, m, f) in scenes] * reps)
+    name, w = max(probe.stats()["workers"].items(),
+                  key=lambda kv: kv[1]["routed"])
+    ordinal, routed = w["ordinal"], w["routed"]
+    probe.close()
+    assert routed >= 2, "stream must load one worker with >= 2 scenes"
+
+    plan = FaultPlan(kill_workers={ordinal: 1})
+    chaos = ServeRouter(factory, 2, max_batch=max_batch, mesh=None,
+                        fault_plan=plan)
+    t0 = time.perf_counter()
+    out = chaos.serve([(c, f, m) for (c, m, f) in scenes] * reps)
+    drain_ms = (time.perf_counter() - t0) * 1e3
+    st = chaos.stats()["faults"]
+    assert all(r.error is None for r in out.values()), \
+        "failover run lost requests"
+    assert st["failovers"] == 1 and st["replayed"] >= 1
+    assert st["recovery_s"] is not None
+    emit("serve/failover_recovery", st["recovery_s"] * 1e3,
+         f"replayed={st['replayed']};stream_ms={drain_ms:.1f};"
+         f"death_to_recovered_ms={st['recovery_s'] * 1e3:.2f};"
+         f"workers=2->1")
+    chaos.close()
+
+    if assert_overhead:
+        assert overhead <= 0.05, (
+            f"single-worker router must cost <= 5% over the bare "
+            f"scheduler, got {overhead * 100:.1f}% "
+            f"({bare_us:.0f}us -> {rout_us:.0f}us)")
+    return overhead
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -246,9 +377,12 @@ def main(argv=None):
         bench_hot_loop(n_points=128, reps=3, windows=3)
         bench_fault_tolerance(n_points=128, reps=3, windows=3,
                               assert_overhead=False)
+        bench_router(n_points=128, reps=3, windows=3,
+                     assert_overhead=False)
     else:
         bench_hot_loop(n_points=128, reps=6, windows=5)
         bench_fault_tolerance(n_points=128, reps=6, windows=5)
+        bench_router(n_points=128, reps=8, windows=5)
 
 
 if __name__ == "__main__":

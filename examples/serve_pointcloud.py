@@ -33,11 +33,21 @@ recorded retry, zero `exec_failed`), exactly the two bad scenes are
 rejected, and no exception escapes the serve loop.  The failure counters
 land in `--metrics-json` alongside the cache telemetry.
 
+`--workers N` (N >= 1) serves the same stream through the multi-worker
+`serve.router.ServeRouter` instead of a bare scheduler: each worker owns
+its own engine + scheduler, and scenes are rendezvous-routed by geometry
+digest so repeated geometry keeps hitting the worker that already cached
+it.  `--kill-worker {auto|ORDINAL}` is the router chaos smoke: the
+chosen worker (auto = the one the digests load most) is killed by an
+injected fault on its second request, and the driver asserts the
+failover contract — every request completes with predictions, >= 1
+request was replayed onto a survivor, 0 requests lost.
+
 Run:  PYTHONPATH=src python examples/serve_pointcloud.py [--scenes 16]
       [--distinct-scenes 8] [--flow fod] [--max-batch 4]
       [--pipeline-depth 2] [--assembly-cache 16] [--max-wait-s T]
       [--min-hit-rate R] [--metrics-json serve_metrics.json]
-      [--inject-faults]
+      [--inject-faults] [--workers 3] [--kill-worker auto]
 """
 
 import argparse
@@ -55,6 +65,138 @@ from repro.serve.scheduler import ServeScheduler
 
 N_STAGES = 2
 SIZE_CYCLE = (384, 640, 900, 1400)     # heterogeneous point counts
+
+
+def _stream(args):
+    """The example's deterministic scene stream: (coords, feats, mask,
+    labels) per scene, geometry repeating every --distinct-scenes."""
+    out = []
+    for i in range(args.scenes):
+        gen = i % args.distinct_scenes
+        n = SIZE_CYCLE[gen % len(SIZE_CYCLE)]
+        coords, mask, feats = lidar_scene(seed=7 + gen, n_points=n, grid=48)
+        labels = (coords[:, 3] > 0).astype(np.int32)
+        labels[~mask] = 0
+        out.append((coords, feats, mask, labels))
+    return out
+
+
+def run_router(args):
+    """--workers N: the same stream through the digest-affinity
+    `ServeRouter`; --kill-worker adds the failover chaos contract."""
+    from repro.serve.faults import FaultPlan
+    from repro.serve.router import ServeRouter
+
+    params = MU.mini_minkunet_init(jax.random.key(0), c_in=4, n_classes=2)
+    factory = PointCloudEngine.factory(params, N_STAGES, flow=args.flow,
+                                       ladder=geometric_ladder(512, 2048))
+    scenes = _stream(args)
+
+    def build(plan):
+        return ServeRouter(factory, args.workers, fault_plan=plan,
+                           max_batch=args.max_batch,
+                           pipeline_depth=args.pipeline_depth,
+                           assembly_cache_entries=args.assembly_cache,
+                           max_wait_s=args.max_wait_s)
+
+    plan = None
+    kill_ordinal = None
+    if args.kill_worker is not None:
+        if args.kill_worker == "auto":
+            # routing is deterministic (seeded scenes, fixed worker
+            # names): preview which worker the digests load most and
+            # kill that one on its SECOND request (so >= 1 replays)
+            probe = build(None)
+            names = [probe.preview(c, m) for c, f, m, lb in scenes]
+            busiest = max(set(names), key=names.count)
+            kill_ordinal = probe.stats()["workers"][busiest]["ordinal"]
+            probe.close()
+            if names.count(busiest) < 2:
+                print("FAIL: no worker receives >= 2 scenes; nothing "
+                      "to replay", file=sys.stderr)
+                sys.exit(1)
+        else:
+            kill_ordinal = int(args.kill_worker)
+        plan = FaultPlan(kill_workers={kill_ordinal: 1})
+        print(f"chaos: killing worker ordinal {kill_ordinal} on its "
+              f"2nd request")
+
+    router = build(plan)
+    rids = {}
+    for coords, feats, mask, labels in scenes:
+        rids[router.submit(coords, feats, mask)] = (mask, labels)
+    results = router.drain()
+    print(f"drained {len(results)} results over {args.workers} workers "
+          f"(completion order: {[r.rid for r in results]})")
+    for r in results:
+        if r.error is not None:
+            print(f"  req {r.rid:2d}: {r.n_points:5d} pts -> {r.error}")
+            continue
+        mask, labels = rids[r.rid]
+        acc = (r.preds[mask] == labels[mask]).mean()
+        print(f"  req {r.rid:2d}: {r.n_points:5d} pts -> bucket "
+              f"{r.bucket:5d}, latency {r.latency_s * 1e3:7.1f} ms, "
+              f"untrained-acc {acc:.2f}")
+
+    stats = router.stats()
+    router.close()
+    pc = stats["pool_cache"]
+    ft = stats["faults"]
+    print(f"\nrouter served {stats['n_completed']}/{stats['n_submitted']} "
+          f"scenes on {stats['n_live']}/{stats['n_workers']} live workers: "
+          f"pool cache {pc['mapping_hits']}+{pc['assembly_hits']} hits "
+          f"(combined rate {pc['combined_hit_rate'] * 100:.0f}%), "
+          f"mean latency {stats['latency_avg_s'] * 1e3:.1f} ms")
+    for name, w in stats["workers"].items():
+        print(f"  worker {name} [{w['state']:5s}]: routed {w['routed']}, "
+              f"processed {w['processed']}"
+              + (f", died: {w['reason']}" if w["reason"] else ""))
+    print(f"faults: {ft['rejected']} rejected, {ft['shed']} shed, "
+          f"{ft['timeout']} timeout, {ft['exec_failed']} exec_failed; "
+          f"{ft['failovers']} failovers, {ft['replayed']} replayed"
+          + (f", recovery {ft['recovery_s'] * 1e3:.1f} ms"
+             if ft["recovery_s"] is not None else ""))
+
+    if args.metrics_json:
+        if plan is not None:
+            stats = dict(stats, fault_plan=plan.stats())
+        with open(args.metrics_json, "w") as f:
+            json.dump(stats, f, indent=2, sort_keys=True)
+        print(f"wrote router metrics to {args.metrics_json}")
+
+    if args.kill_worker is not None:
+        problems = []
+        if len(results) != args.scenes:
+            problems.append(f"{len(results)}/{args.scenes} requests "
+                            f"completed (lost requests)")
+        bad = [r.rid for r in results if r.error is not None]
+        if bad:
+            problems.append(f"requests {bad} completed without "
+                            f"predictions")
+        if ft["failovers"] != 1:
+            problems.append(f"expected exactly 1 failover, got "
+                            f"{ft['failovers']}")
+        if ft["replayed"] < 1:
+            problems.append("no request was replayed onto a survivor")
+        if plan.stats()["workers_killed"] != 1:
+            problems.append("the planned worker kill never fired")
+        if problems:
+            print("FAIL: worker-failover contract violated: "
+                  + "; ".join(problems), file=sys.stderr)
+            sys.exit(1)
+        print("worker-failover contract held: every request completed "
+              f"with predictions, {ft['replayed']} replayed onto "
+              "survivors, 0 lost")
+
+    if args.min_hit_rate is not None:
+        combined = pc["combined_hit_rate"]
+        print(f"combined pool hit rate {combined * 100:.0f}% "
+              f"(floor {args.min_hit_rate * 100:.0f}%)")
+        if combined < args.min_hit_rate:
+            print(f"FAIL: combined hit rate {combined:.2f} below the "
+                  f"--min-hit-rate floor {args.min_hit_rate:.2f}",
+                  file=sys.stderr)
+            sys.exit(1)
 
 
 def main():
@@ -83,7 +225,23 @@ def main():
     ap.add_argument("--inject-faults", action="store_true",
                     help="run through a low-rate FaultPlan and assert "
                          "the fault-tolerance contract (CI chaos smoke)")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="serve through a ServeRouter over N workers "
+                         "(0 = bare scheduler)")
+    ap.add_argument("--kill-worker", default=None, metavar="auto|ORDINAL",
+                    help="router chaos: kill this worker ordinal (or the "
+                         "busiest, 'auto') mid-stream and assert the "
+                         "failover contract (needs --workers >= 2)")
     args = ap.parse_args()
+    if args.kill_worker is not None and args.workers < 2:
+        ap.error("--kill-worker needs --workers >= 2 (a survivor to "
+                 "replay onto)")
+    if args.workers and args.inject_faults:
+        ap.error("--inject-faults is the bare-scheduler chaos smoke; "
+                 "use --kill-worker for router chaos")
+
+    if args.workers:
+        return run_router(args)
 
     plan = None
     if args.inject_faults:
@@ -101,12 +259,7 @@ def main():
                            max_wait_s=args.max_wait_s, fault_plan=plan)
 
     scenes = {}
-    for i in range(args.scenes):
-        gen = i % args.distinct_scenes
-        n = SIZE_CYCLE[gen % len(SIZE_CYCLE)]
-        coords, mask, feats = lidar_scene(seed=7 + gen, n_points=n, grid=48)
-        labels = (coords[:, 3] > 0).astype(np.int32)
-        labels[~mask] = 0
+    for coords, feats, mask, labels in _stream(args):
         rid = sched.submit(coords, feats, mask)
         scenes[rid] = (mask, labels)
     if args.inject_faults:

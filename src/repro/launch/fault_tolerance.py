@@ -2,9 +2,14 @@
 
   * PreemptionHandler — SIGTERM/SIGINT -> finish the in-flight step, force a
     checkpoint, exit cleanly (what a TPU maintenance event sends).
-  * Ticker — joinable daemon ticker (the primitive under Heartbeat and
-    the serve scheduler's background watchdog): on_tick() every
-    interval_s, close() joins so threads never leak past their owner.
+  * Ticker — joinable daemon ticker (the primitive under Heartbeat, the
+    serve scheduler's background watchdog, and the serve router's health
+    checker): on_tick() every interval_s, close() joins so threads never
+    leak past their owner.
+  * Pulse — lock-free liveness record: the worked thread beat()s, a
+    watcher reads age()/stalled(stall_s).  The primitive under Heartbeat
+    and the serve router's per-worker liveness policy (a worker whose
+    pulse goes stale is declared hung and failed over).
   * Heartbeat — per-step wall-time log with a stall watchdog; at cluster
     scale the same records feed the coordinator's straggler detection
     (slowest-k host report).
@@ -99,6 +104,27 @@ class Ticker:
         return False
 
 
+class Pulse:
+    """Lock-free liveness record shared between one worked thread and a
+    watcher: the worker `beat()`s whenever it makes progress, the watcher
+    reads `age()` / `stalled(stall_s)`.  A bare monotonic float store —
+    atomic under the GIL, no lock on the hot path — so beating from a
+    serving loop costs one clock read."""
+
+    def __init__(self):
+        self._last = time.monotonic()
+
+    def beat(self) -> None:
+        self._last = time.monotonic()
+
+    def age(self) -> float:
+        """Seconds since the last beat."""
+        return time.monotonic() - self._last
+
+    def stalled(self, stall_s: float) -> bool:
+        return self.age() > stall_s
+
+
 class Heartbeat:
     """Background watchdog: if no beat() within `stall_s`, invoke
     on_stall (default: log loudly).  The cluster version reports to the
@@ -110,14 +136,14 @@ class Heartbeat:
         self.on_stall = on_stall or (lambda dt: print(
             f"[heartbeat] STALL: no step completed in {dt:.0f}s",
             flush=True))
-        self._last = time.time()
+        self._pulse = Pulse()
         self._ticker = Ticker(stall_s / 4, self._check, name="heartbeat")
 
     def beat(self):
-        self._last = time.time()
+        self._pulse.beat()
 
     def _check(self):
-        dt = time.time() - self._last
+        dt = self._pulse.age()
         if dt > self.stall_s:
             self.on_stall(dt)
 

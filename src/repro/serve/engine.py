@@ -108,6 +108,19 @@ class PointCloudEngine:
         self._apply_batch = jax.jit(self._apply_batch_fn,
                                     donate_argnums=(3,))
 
+    @classmethod
+    def factory(cls, params, n_stages: int, **kwargs):
+        """Zero-arg engine builder for pool owners (`serve.router.
+        ServeRouter` gives each worker its own engine: private jit entry
+        points + caches, identical params/config — so predictions are
+        worker-independent while cache locality stays worker-local,
+        which is what digest-affinity routing monetizes)."""
+
+        def build() -> "PointCloudEngine":
+            return cls(params, n_stages, **kwargs)
+
+        return build
+
     # -- scheduler hookup -------------------------------------------------
 
     def scheduler(self):

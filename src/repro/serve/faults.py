@@ -28,20 +28,26 @@ builds its fault-tolerance on:
     the scheduler can route the failure into a `rejected` result.
 
   * **`FaultPlan`** — the injectable chaos seam threaded through
-    `ServeScheduler`/`PointCloudEngine`: fail dispatch *i* (one-shot —
-    the retry gets a fresh dispatch id and succeeds), poison request
-    *j* (every dispatch containing it fails, exercising the bisect
-    isolation path), corrupt submitted scene *k* (NaN features, caught
-    by admission control), delay bucket *c* (slow-device simulation for
-    deadline / shed / watchdog tests).  The no-plan path costs one
-    `is None` check per seam — the happy path stays bit-identical.
+    `ServeScheduler`/`PointCloudEngine`/`ServeRouter`: fail dispatch *i*
+    (one-shot — the retry gets a fresh dispatch id and succeeds), poison
+    request *j* (every dispatch containing it fails, exercising the
+    bisect isolation path), corrupt submitted scene *k* (NaN features,
+    caught by admission control), delay bucket *c* (slow-device
+    simulation for deadline / shed / watchdog tests), kill worker *w* at
+    its *n*-th served request (the worker thread dies — the router must
+    fail it over and replay its queued + in-flight work), hang worker
+    *w* (the worker loop stops beating — the router's liveness policy
+    must declare it dead by missed heartbeats).  The no-plan path costs
+    one `is None` check per seam — the happy path stays bit-identical.
+    Every timed wait goes through one wake event, so `close()` (called
+    by `ServeScheduler.close()` / `ServeRouter.close()`) wakes pending
+    injected delays early and shutdown under chaos is prompt.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 from typing import Mapping
 
 import numpy as np
@@ -212,15 +218,35 @@ class FaultPlan:
     corrupt_scenes  : submit ordinals (0-based, per plan) whose feats
                       are NaN-corrupted before validation — models a
                       garbage sensor frame, caught by admission control.
-    delay_buckets   : {bucket_capacity: seconds} slept in the device
+    delay_buckets   : {bucket_capacity: seconds} waited in the device
                       wait — models a slow device for deadline / shed /
-                      watchdog tests.
+                      watchdog tests.  Interruptible: `close()` wakes
+                      pending delays so shutdown under chaos is prompt.
+    kill_workers    : {worker_ordinal: step} — the worker's serving loop
+                      raises `InjectedFault` when it is about to process
+                      its `step`-th request (0-based, counted per
+                      worker), crashing the worker thread mid-stream.
+                      The request itself and everything queued or in
+                      flight on that worker stays incomplete — the
+                      router must fail the worker over and replay them.
+    hang_workers    : {worker_ordinal: seconds} — the worker's serving
+                      loop stops dead for that long on its first request
+                      after having served at least one (so the hang hits
+                      a *warm* worker mid-stream).  No exception is
+                      raised: the worker just stops beating, which is
+                      exactly what a wedged device wait looks like — the
+                      router's liveness policy must catch it by missed
+                      heartbeats.  Woken early by `close()`.
     """
 
     fail_dispatches: frozenset = frozenset()
     poison_rids: frozenset = frozenset()
     corrupt_scenes: frozenset = frozenset()
     delay_buckets: Mapping[int, float] = dataclasses.field(
+        default_factory=dict)
+    kill_workers: Mapping[int, int] = dataclasses.field(
+        default_factory=dict)
+    hang_workers: Mapping[int, float] = dataclasses.field(
         default_factory=dict)
 
     def __post_init__(self):
@@ -229,11 +255,33 @@ class FaultPlan:
         self.corrupt_scenes = frozenset(int(i) for i in self.corrupt_scenes)
         self.delay_buckets = {int(c): float(s)
                               for c, s in dict(self.delay_buckets).items()}
+        self.kill_workers = {int(w): int(s)
+                             for w, s in dict(self.kill_workers).items()}
+        self.hang_workers = {int(w): float(s)
+                             for w, s in dict(self.hang_workers).items()}
         self._lock = threading.Lock()
+        self._wake = threading.Event()
+        self._hung: set = set()
         self._n_submits = 0
         self._n_corrupted = 0
         self._n_injected = 0
         self._n_delays = 0
+        self._n_kills = 0
+        self._n_hangs = 0
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def close(self) -> None:
+        """Wake every pending injected wait (bucket delays, worker
+        hangs) and skip future ones — called by the scheduler's/router's
+        close() so shutdown under chaos never sits out a planned sleep.
+        Instant seams (kills, dispatch failures, corruptions) keep
+        firing; only the *waits* are cancelled."""
+        self._wake.set()
+
+    @property
+    def closed(self) -> bool:
+        return self._wake.is_set()
 
     # -- seams (called by the scheduler) ----------------------------------
 
@@ -253,14 +301,15 @@ class FaultPlan:
         return coords, feats, mask
 
     def check_wait(self, dispatch_id: int, cap: int, rids) -> None:
-        """Wait seam (runs OUTSIDE the scheduler lock): sleep the
-        bucket's planned delay, then raise `InjectedFault` if this
-        dispatch — or any poisoned request on it — is planned to fail."""
+        """Wait seam (runs OUTSIDE the scheduler lock): wait out the
+        bucket's planned delay (interruptible — `close()` wakes it
+        early), then raise `InjectedFault` if this dispatch — or any
+        poisoned request on it — is planned to fail."""
         delay = self.delay_buckets.get(int(cap), 0.0)
         if delay > 0:
             with self._lock:
                 self._n_delays += 1
-            time.sleep(delay)
+            self._wake.wait(delay)
         poisoned = self.poison_rids.intersection(int(r) for r in rids)
         if int(dispatch_id) in self.fail_dispatches or poisoned:
             with self._lock:
@@ -271,6 +320,35 @@ class FaultPlan:
                 + (f", poisoned {sorted(poisoned)}" if poisoned else "")
                 + ")")
 
+    def on_worker_step(self, worker: int, step: int) -> None:
+        """Worker-loop seam (called by a `ServeRouter` worker thread just
+        before it processes its `step`-th request, 0-based per worker):
+
+          * a planned HANG stops the loop cold for the planned duration
+            (once, on the first request after the worker has served at
+            least one — i.e. on a warm worker) without raising: the
+            worker simply stops beating, and the router's liveness
+            policy must notice;
+          * a planned KILL raises `InjectedFault` at exactly the planned
+            step, crashing the worker thread with its queued and
+            in-flight work unfinished.
+        """
+        worker, step = int(worker), int(step)
+        hang = self.hang_workers.get(worker)
+        if hang is not None:
+            with self._lock:
+                fire = step >= 1 and worker not in self._hung
+                if fire:
+                    self._hung.add(worker)
+                    self._n_hangs += 1
+            if fire:
+                self._wake.wait(hang)
+        if self.kill_workers.get(worker) == step:
+            with self._lock:
+                self._n_kills += 1
+            raise InjectedFault(
+                f"injected worker kill (worker {worker}, step {step})")
+
     # -- telemetry --------------------------------------------------------
 
     def stats(self) -> dict:
@@ -278,4 +356,6 @@ class FaultPlan:
             return {"submits_seen": self._n_submits,
                     "scenes_corrupted": self._n_corrupted,
                     "failures_injected": self._n_injected,
-                    "delays_injected": self._n_delays}
+                    "delays_injected": self._n_delays,
+                    "workers_killed": self._n_kills,
+                    "workers_hung": self._n_hangs}

@@ -71,6 +71,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import random
 import threading
 import time
 from collections import OrderedDict, deque
@@ -241,6 +242,17 @@ class ServeScheduler:
     retry_bisect           : split a failed multi-scene batch into halves
                              on retry (poison isolation) instead of
                              retrying it whole.
+    retry_backoff_s        : base of the jittered exponential backoff
+                             slept before each retry dispatch —
+                             generation g waits retry_backoff_s * 2^g *
+                             uniform(0.5, 1.5), so a transiently sick
+                             device is not hammered with immediate
+                             redispatches and concurrent retriers
+                             decorrelate.  The default 0 preserves the
+                             immediate-retry timing (and the bench
+                             baseline).  The wait releases the scheduler
+                             lock, so producers keep admitting scenes
+                             while a retry backs off.
     watchdog_s             : background ticker interval — fires
                              `max_wait_s` deadline flushes, expires
                              per-request deadlines and retires ready
@@ -269,12 +281,15 @@ class ServeScheduler:
                  max_backlog: int | None = None,
                  max_retries: int = DEFAULT_MAX_RETRIES,
                  retry_bisect: bool = True,
+                 retry_backoff_s: float = 0.0,
                  watchdog_s: float | None = None,
                  fault_plan: FLT.FaultPlan | None = None):
         if pipeline_depth < 0:
             raise ValueError("pipeline_depth must be >= 0")
         if max_retries < 0:
             raise ValueError("max_retries must be >= 0")
+        if retry_backoff_s < 0:
+            raise ValueError("retry_backoff_s must be >= 0")
         if max_backlog is not None and max_backlog < 1:
             raise ValueError("max_backlog must be >= 1 (or None)")
         self.engine = engine
@@ -304,6 +319,7 @@ class ServeScheduler:
         self.max_backlog = max_backlog
         self.max_retries = int(max_retries)
         self.retry_bisect = bool(retry_bisect)
+        self.retry_backoff_s = float(retry_backoff_s)
         self.fault_plan = fault_plan if fault_plan is not None else \
             getattr(engine, "fault_plan", None)
         # the packed-key budget is only a constraint for the v2 engine
@@ -348,6 +364,7 @@ class ServeScheduler:
         self._deadline_flushes = 0
         self._fault_counts = {c: 0 for c in FLT.ERROR_CODES}
         self._n_retries = 0             # retry dispatches issued
+        self._backoff_s = 0.0           # total time spent backing off
         self._n_failed_dispatches = 0
         self._last_failure_t = None
         self._recovery_s = None         # last failure -> next good retire
@@ -370,9 +387,13 @@ class ServeScheduler:
         Queued scenes are executed (dummy-filled partial batches) and
         every in-flight micro-batch retires, so completed results stay
         drainable after close; the watchdog ticker thread is JOINED (no
-        leaked daemon threads).  Idempotent; a submit after close
-        completes with a `rejected` result instead of raising.
+        leaked daemon threads).  A chaos `FaultPlan` is closed first, so
+        pending injected delays wake early and shutdown under chaos is
+        prompt.  Idempotent; a submit after close completes with a
+        `rejected` result instead of raising.
         """
+        if self.fault_plan is not None:
+            self.fault_plan.close()     # wake injected waits first
         wd, self._watchdog = self._watchdog, None
         if wd is not None:
             wd.close()                  # join OUTSIDE the lock
@@ -756,6 +777,7 @@ class ServeScheduler:
                            f"{self.max_retries + 1}x; last error: {exc}"))
         if not retryable:
             return
+        self._backoff_locked(slot.retries)
         if len(retryable) > 1 and self.retry_bisect:
             mid = (len(retryable) + 1) // 2
             groups = (retryable[:mid], retryable[mid:])
@@ -763,6 +785,24 @@ class ServeScheduler:
             groups = (retryable,)
         for group in groups:
             self._dispatch(group, slot.cap, slot.retries + 1)
+
+    def _backoff_locked(self, generation: int) -> None:
+        """Jittered exponential backoff before a retry dispatch (the
+        `retry_backoff_s` knob; 0 — the default — keeps retries
+        immediate).  The retried requests live only on this call's
+        stack, so the lock is safe to release for the wait: producers
+        keep admitting scenes, and nothing can re-dispatch the failed
+        slot's requests concurrently."""
+        if self.retry_backoff_s <= 0 or self._closed:
+            return
+        delay = self.retry_backoff_s * (2 ** generation) \
+            * (0.5 + random.random())
+        self._backoff_s += delay
+        self._lock.release()
+        try:
+            time.sleep(delay)
+        finally:
+            self._lock.acquire()
 
     def _retire_oldest_locked(self, only_ready: bool = False) -> bool:
         """Retire the OLDEST in-flight micro-batch; returns False when
@@ -959,6 +999,7 @@ class ServeScheduler:
                     **self._fault_counts,
                     "failed_dispatches": self._n_failed_dispatches,
                     "retries": self._n_retries,
+                    "retry_backoff_s": self._backoff_s,
                     "recovery_s": self._recovery_s,
                 },
                 "watchdog": self._watchdog is not None,

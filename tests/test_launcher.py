@@ -61,3 +61,52 @@ def test_train_loss_improves():
                      "--batch", "8", "--seq", "32", "--lr", "1e-3",
                      "--log-every", "5"])
     assert "improved" in out and "NOT improved" not in out
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerance runtime units (launch/fault_tolerance.py)
+# ---------------------------------------------------------------------------
+
+def test_preemption_handler_catches_sigterm_and_restores():
+    """SIGTERM inside the context flips should_stop (finish the step,
+    checkpoint, exit clean); the previous handler is restored on exit."""
+    import signal
+    from repro.launch.fault_tolerance import PreemptionHandler
+
+    seen = []
+    prev = signal.signal(signal.SIGTERM, lambda s, f: seen.append(s))
+    try:
+        with PreemptionHandler() as p:
+            assert not p.should_stop
+            os.kill(os.getpid(), signal.SIGTERM)
+            assert p.should_stop          # caught, not fatal
+        assert not seen                   # ... and not leaked through
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert seen == [signal.SIGTERM]   # original handler restored
+    finally:
+        signal.signal(signal.SIGTERM, prev)
+
+
+def test_step_timer_flags_stragglers():
+    """A step >> the rolling median is flagged — the single-process
+    analogue of cross-host straggler mitigation — but only once enough
+    history exists to trust the median."""
+    import time
+    from repro.launch.fault_tolerance import StepTimer
+
+    t = StepTimer(window=10, straggler_factor=2.0)
+    t.start()
+    first = t.stop()
+    assert first["step_s"] >= 0 and not first["straggler"]
+    for _ in range(6):                    # build history: ~1ms steps
+        t.start()
+        time.sleep(0.001)
+        rec = t.stop()
+        assert not rec["straggler"]
+    t.start()
+    time.sleep(0.03)                      # 30x the median
+    slow = t.stop()
+    assert slow["straggler"] and slow["step_s"] > 2.0 * slow["median_s"]
+    t.start()                             # recovery: normal step unflagged
+    time.sleep(0.001)
+    assert not t.stop()["straggler"]

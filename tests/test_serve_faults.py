@@ -7,6 +7,7 @@ watchdog + close() lifecycle (launch/fault_tolerance.py Ticker), and
 (concurrent producers + injected FaultPlan) lives in
 tests/test_serve_scheduler.py."""
 
+import threading
 import time
 
 import numpy as np
@@ -152,7 +153,53 @@ def test_fault_plan_seams():
     with pytest.raises(InjectedFault, match="poisoned"):
         plan.check_wait(5, 128, [6, 7])         # poisoned rid
     assert plan.stats() == {"submits_seen": 2, "scenes_corrupted": 1,
-                            "failures_injected": 2, "delays_injected": 1}
+                            "failures_injected": 2, "delays_injected": 1,
+                            "workers_killed": 0, "workers_hung": 0}
+
+
+def test_fault_plan_worker_seams():
+    """Router chaos seams: a planned kill raises at exactly the planned
+    per-worker step; a planned hang blocks once, only on a warm worker
+    (step >= 1), and never raises."""
+    plan = FaultPlan(kill_workers={0: 2}, hang_workers={1: 0.06})
+    plan.on_worker_step(0, 0)
+    plan.on_worker_step(0, 1)
+    with pytest.raises(InjectedFault, match=r"worker 0, step 2"):
+        plan.on_worker_step(0, 2)
+
+    t0 = time.monotonic()
+    plan.on_worker_step(1, 0)               # cold worker: no hang yet
+    assert time.monotonic() - t0 < 0.05
+    t0 = time.monotonic()
+    plan.on_worker_step(1, 1)               # warm: hangs for the duration
+    assert time.monotonic() - t0 >= 0.06
+    t0 = time.monotonic()
+    plan.on_worker_step(1, 2)               # fires once only
+    assert time.monotonic() - t0 < 0.05
+    st = plan.stats()
+    assert st["workers_killed"] == 1 and st["workers_hung"] == 1
+
+
+def test_fault_plan_close_wakes_injected_waits():
+    """Satellite: close() wakes planned delays and hangs early, so
+    shutdown under chaos is prompt instead of waiting out multi-second
+    injected stalls."""
+    plan = FaultPlan(delay_buckets={64: 30.0}, hang_workers={0: 30.0})
+    done = []
+
+    def waiter():
+        plan.check_wait(0, 64, [0])         # 30s delay unless woken
+        plan.on_worker_step(0, 1)           # 30s hang unless woken
+        done.append(time.monotonic())
+
+    th = threading.Thread(target=waiter)
+    t0 = time.monotonic()
+    th.start()
+    time.sleep(0.05)
+    assert not done and not plan.closed     # really waiting
+    plan.close()
+    th.join(5.0)
+    assert done and done[0] - t0 < 5.0 and plan.closed
 
 
 def test_ticker_and_heartbeat_close_join():
@@ -286,6 +333,39 @@ def test_transient_dispatch_failure_retries_bit_identical(served):
     assert st["retries"] == 2                   # bisected into singles
     assert st["recovery_s"] is not None and st["recovery_s"] >= 0
     assert plan.stats()["failures_injected"] == 1
+
+
+def test_retry_backoff_jittered_counted_and_off_by_default(served):
+    """Satellite: retry dispatches back off (jittered exponential) so a
+    transiently sick device isn't hammered; results stay bit-identical,
+    the waited time is counted, and the default (0) preserves the
+    immediate-retry timing."""
+    params, engine = served
+    scenes = [_scene_cf(i, 40) for i in (9, 10)]
+    sched = ServeScheduler(engine, max_batch=2, mesh=None,
+                           fault_plan=FaultPlan(fail_dispatches={0}),
+                           retry_backoff_s=0.05)
+    t0 = time.monotonic()
+    out = sched.serve(scenes)
+    dt = time.monotonic() - t0
+    sched.close()
+    assert all(r.ok for r in out.values())
+    for rid, (c, f, m) in zip(sorted(out), scenes):
+        np.testing.assert_array_equal(out[rid].preds,
+                                      _ref_preds(params, c, m, f))
+    backed = sched.stats()["faults"]["retry_backoff_s"]
+    assert backed >= 0.025                  # base * 2^0 * jitter in [0.5, 1.5)
+    assert dt >= 0.025                      # ... and it was really slept
+
+    sched2 = ServeScheduler(engine, max_batch=2, mesh=None,
+                            fault_plan=FaultPlan(fail_dispatches={0}))
+    out2 = sched2.serve(scenes)
+    sched2.close()
+    assert all(r.ok for r in out2.values())
+    assert sched2.stats()["faults"]["retry_backoff_s"] == 0.0
+
+    with pytest.raises(ValueError, match="retry_backoff_s"):
+        ServeScheduler(engine, retry_backoff_s=-0.1)
 
 
 def test_poison_scene_isolated_by_bisect(served):

@@ -1,0 +1,379 @@
+"""Multi-worker serving fabric (serve/router.py): rendezvous digest
+affinity, health-checked failover with in-flight replay, elastic pool
+membership, graceful shedding, and the single-worker == bare-scheduler
+parity contract.
+
+Engine economy: the module shares a POOL of warmed engines that the
+router factory cycles through — each router's workers get distinct
+engines (private caches, as in production) while the suite pays each
+engine's jit compiles exactly once.  Routers built under chaos use
+tight liveness policies only AFTER the pool is warm, so a slow first
+compile is never mistaken for a hang.
+"""
+
+import itertools
+import time
+
+import numpy as np
+import pytest
+import jax
+
+from repro.data.synthetic import lidar_scene
+from repro.launch.fault_tolerance import Pulse
+from repro.serve import faults as FLT
+from repro.serve.buckets import geometric_ladder
+from repro.serve.engine import PointCloudEngine
+from repro.serve.faults import FaultPlan
+from repro.serve.router import (LivenessPolicy, ServeRouter,
+                                _rendezvous_score)
+from repro.serve.scheduler import ServeScheduler
+from tests.test_serve_faults import _mini_params
+
+
+N_ENGINES = 4
+
+
+def _scenes(n=10):
+    out = []
+    for s in range(n):
+        c, m, f = lidar_scene(seed=240 + s, n_points=40 + 7 * s, grid=16)
+        out.append((c, f, m))
+    return out
+
+
+SCENES = _scenes()
+
+
+@pytest.fixture(scope="module")
+def pool():
+    """(factory, reference) — `factory` cycles a pool of N_ENGINES warmed
+    engines (distinct per concurrently-live worker, reused across
+    routers), `reference` is the bare-scheduler predictions for SCENES
+    in submission order (the bit-identity baseline)."""
+    jax.clear_caches()
+    params = _mini_params()
+    engines = [PointCloudEngine(params, n_stages=2, flow="fod",
+                                ladder=geometric_ladder(64, 128))
+               for _ in range(N_ENGINES)]
+    reference = None
+    for eng in engines:                 # warm every engine's jit caches
+        sched = ServeScheduler(eng, max_batch=2)
+        out = sched.serve(SCENES)
+        sched.close()
+        preds = [np.asarray(out[r].preds) for r in sorted(out)]
+        if reference is None:
+            reference = preds
+        else:                           # engines must be interchangeable
+            for a, b in zip(reference, preds):
+                assert np.array_equal(a, b)
+    counter = itertools.count()
+
+    def factory():
+        return engines[next(counter) % N_ENGINES]
+
+    return factory, reference
+
+
+def _router(factory, n_workers, **kw):
+    kw.setdefault("max_batch", 2)
+    return ServeRouter(factory, n_workers, **kw)
+
+
+# ---------------------------------------------------------------------------
+# pure units: policy + rendezvous hashing
+# ---------------------------------------------------------------------------
+
+def test_liveness_policy_validation():
+    p = LivenessPolicy(beat_s=0.1, miss_beats=20)
+    assert p.stall_s == pytest.approx(2.0)
+    with pytest.raises(ValueError, match="beat_s > 0"):
+        LivenessPolicy(beat_s=0.0)
+    with pytest.raises(ValueError, match="miss_beats"):
+        LivenessPolicy(miss_beats=0)
+
+
+def test_rendezvous_minimal_reshuffle():
+    """The HRW property the elastic pool leans on: removing one worker
+    moves ONLY the keys that ranked it first — every other key keeps its
+    worker."""
+    names3 = ["w0", "w1", "w2"]
+    names2 = ["w0", "w1"]
+    keys = [f"scene-{i}".encode() for i in range(200)]
+
+    def best(key, names):
+        return max(names, key=lambda n: _rendezvous_score(key, n))
+
+    owners3 = {k: best(k, names3) for k in keys}
+    owners2 = {k: best(k, names2) for k in keys}
+    # all three workers get a share (spread), deterministically
+    assert set(owners3.values()) == set(names3)
+    for k in keys:
+        if owners3[k] != "w2":
+            assert owners2[k] == owners3[k]     # survivors keep their keys
+    assert {k: best(k, names3) for k in keys} == owners3    # stable
+
+
+def test_pulse_liveness():
+    p = Pulse()
+    assert p.age() < 0.5 and not p.stalled(0.5)
+    time.sleep(0.06)
+    assert p.stalled(0.05)
+    p.beat()
+    assert not p.stalled(0.05)
+
+
+# ---------------------------------------------------------------------------
+# routing + parity (no faults)
+# ---------------------------------------------------------------------------
+
+def test_single_worker_parity_with_bare_scheduler(pool):
+    """Acceptance: the 1-worker router is bit-identical to the bare
+    scheduler it fronts."""
+    factory, reference = pool
+    with _router(factory, 1) as r:
+        out = r.serve(SCENES)
+    assert len(out) == len(SCENES)
+    for rid in sorted(out):
+        res = out[rid]
+        assert res.error is None
+        assert np.array_equal(np.asarray(res.preds), reference[rid])
+        assert res.n_points == np.asarray(SCENES[rid][0]).shape[0]
+
+
+def test_digest_affinity_and_spread(pool):
+    """Identical geometry keeps landing on the same worker (previewed
+    and measured via per-worker routed counters); distinct geometry
+    spreads over the pool."""
+    factory, reference = pool
+    with _router(factory, 3) as r:
+        previews = [r.preview(c, m) for c, f, m in SCENES]
+        assert all(p is not None for p in previews)
+        assert len(set(previews)) > 1               # spread
+        out1 = r.serve(SCENES)
+        st1 = r.stats()
+        routed1 = {n: w["routed"] for n, w in st1["workers"].items()}
+        # the preview IS the route taken
+        for name in routed1:
+            assert routed1[name] == previews.count(name)
+        out2 = r.serve(SCENES)                      # same geometry again
+        st2 = r.stats()
+        routed2 = {n: w["routed"] for n, w in st2["workers"].items()}
+        assert routed2 == {n: 2 * c for n, c in routed1.items()}
+        # affinity pays: repeat stream hits the workers' mapping caches
+        pc = st2["pool_cache"]
+        assert pc["mapping_hits"] >= len(SCENES)
+    for i, rid in enumerate(sorted(out2)):
+        assert np.array_equal(np.asarray(out2[rid].preds), reference[i])
+    # results from both streams were completed exactly once each
+    assert sorted(out1) != sorted(out2)
+
+
+# ---------------------------------------------------------------------------
+# failover + replay (chaos)
+# ---------------------------------------------------------------------------
+
+def _busiest(router_stats):
+    name, w = max(router_stats["workers"].items(),
+                  key=lambda kv: kv[1]["routed"])
+    return name, w["ordinal"], w["routed"]
+
+
+def test_worker_kill_failover_bit_identical(pool):
+    """Acceptance chaos: kill one of 3 workers mid-stream — every
+    request completes with predictions, replayed survivors are
+    bit-identical to the no-fault run, and a follow-up stream on the
+    shrunken pool serves clean."""
+    factory, reference = pool
+    # probe the (deterministic) routing to target the busiest worker
+    with _router(factory, 3) as probe:
+        probe.serve(SCENES)
+        name, ordinal, routed = _busiest(probe.stats())
+    assert routed >= 2, "scene set must load one worker with >= 2 items"
+
+    plan = FaultPlan(kill_workers={ordinal: 1})     # dies on its 2nd item
+    r = _router(factory, 3, fault_plan=plan)
+    try:
+        out = r.serve(SCENES)
+        st = r.stats()
+        assert plan.stats()["workers_killed"] == 1
+        assert st["faults"]["failovers"] == 1
+        assert st["faults"]["replayed"] >= 1
+        assert st["faults"]["recovery_s"] is not None
+        assert st["workers"][name]["state"] == "dead"
+        assert "crashed" in st["workers"][name]["reason"]
+        assert len(out) == len(SCENES)
+        for rid in sorted(out):                     # 0 lost, bit-identical
+            assert out[rid].error is None
+            assert np.array_equal(np.asarray(out[rid].preds),
+                                  reference[rid])
+        # follow-up stream on the shrunken pool serves clean
+        out2 = r.serve(SCENES)
+        assert all(res.error is None for res in out2.values())
+        assert r.stats()["n_live"] == 2
+    finally:
+        r.close()
+    assert not any(w["state"] in ("live", "draining")
+                   for w in r.stats()["workers"].values())
+
+
+def test_hung_worker_detected_and_failed_over(pool):
+    """A worker that stops beating (injected hang, no crash) is declared
+    dead by the liveness policy and its work replays; its late results
+    are discarded by the ownership check."""
+    factory, reference = pool
+    with _router(factory, 2) as probe:
+        probe.serve(SCENES)
+        name, ordinal, routed = _busiest(probe.stats())
+    assert routed >= 2
+
+    plan = FaultPlan(hang_workers={ordinal: 8.0})
+    r = _router(factory, 2, fault_plan=plan)
+    try:
+        # tighten liveness only now: the pool's engines are warm, so the
+        # only multi-second stall left is the injected hang
+        r.liveness = LivenessPolicy(beat_s=0.05, miss_beats=16)  # 0.8s
+        t0 = time.monotonic()
+        out = r.serve(SCENES)
+        dt = time.monotonic() - t0
+        st = r.stats()
+        assert plan.stats()["workers_hung"] == 1
+        assert st["faults"]["failovers"] == 1
+        assert st["workers"][name]["state"] == "dead"
+        assert "hung" in st["workers"][name]["reason"]
+        assert dt < 8.0, "drain must not wait out the full hang"
+        for rid in sorted(out):
+            assert out[rid].error is None
+            assert np.array_equal(np.asarray(out[rid].preds),
+                                  reference[rid])
+    finally:
+        r.close()
+
+
+def test_replay_budget_exhaustion_exec_failed(pool):
+    """max_replays=0: requests on a killed worker complete with typed
+    exec_failed instead of replaying — same taxonomy as the scheduler's
+    retry exhaustion."""
+    factory, _ = pool
+    plan = FaultPlan(kill_workers={0: 0})           # dies on its 1st item
+    with _router(factory, 1, fault_plan=plan, max_replays=0) as r:
+        out = r.serve(SCENES)
+    assert len(out) == len(SCENES)
+    codes = {res.error.code for res in out.values() if res.error}
+    assert codes and codes <= {FLT.EXEC_FAILED, FLT.SHED}
+    assert any(res.error.code == FLT.EXEC_FAILED
+               and "replay budget exhausted" in res.error.message
+               for res in out.values())
+
+
+def test_shed_on_empty_and_saturated_pool(pool):
+    """Graceful degradation: zero live workers and per-worker backlog
+    saturation both complete requests with typed shed results — the
+    stream never raises and never queues unbounded."""
+    factory, reference = pool
+    # zero live workers: the only worker dies on its first item
+    plan = FaultPlan(kill_workers={0: 0})
+    with _router(factory, 1, fault_plan=plan) as r:
+        out = r.serve(SCENES)
+        assert all(res.error is not None for res in out.values())
+        assert any(res.error.code == FLT.SHED and
+                   "no live workers to replay" in res.error.message
+                   for res in out.values())
+        # admission on the dead pool sheds immediately, typed
+        c, f, m = SCENES[0]
+        rid = r.submit(c, f, m)
+        res = r.poll()
+        shed = {x.rid: x for x in res}[rid]
+        assert shed.error.code == FLT.SHED
+        assert "no live workers in the pool" in shed.error.message
+
+    # saturation: completions only happen on flush, so a second submit
+    # against max_backlog=1 finds the worker at its bound and sheds
+    with _router(factory, 1, max_backlog=1) as r:
+        c0, f0, m0 = SCENES[0]
+        c1, f1, m1 = SCENES[1]
+        rid0 = r.submit(c0, f0, m0)
+        rid1 = r.submit(c1, f1, m1)
+        by_rid = {res.rid: res for res in r.drain()}
+        assert by_rid[rid0].error is None
+        assert np.array_equal(np.asarray(by_rid[rid0].preds), reference[0])
+        assert by_rid[rid1].error is not None
+        assert by_rid[rid1].error.code == FLT.SHED
+        assert "max_backlog" in by_rid[rid1].error.message
+
+
+# ---------------------------------------------------------------------------
+# elastic pool
+# ---------------------------------------------------------------------------
+
+def test_elastic_add_remove_with_reaffinity(pool):
+    """add_worker(): only the keys that rank the newcomer first move;
+    remove_worker() drains-then-leaves and previews revert EXACTLY to
+    the pre-join assignment (the rendezvous property, end to end)."""
+    factory, reference = pool
+    r = _router(factory, 2)
+    try:
+        r.serve(SCENES)
+        before = [r.preview(c, m) for c, f, m in SCENES]
+        new = r.add_worker()
+        assert r.stats()["n_live"] == 3
+        after = [r.preview(c, m) for c, f, m in SCENES]
+        for b, a in zip(before, after):
+            assert a == b or a == new       # moves only TO the newcomer
+        out = r.serve(SCENES)               # shared pool serves clean
+        for i, rid in enumerate(sorted(out)):
+            assert out[rid].error is None
+            assert np.array_equal(np.asarray(out[rid].preds),
+                                  reference[i])
+        r.remove_worker(new)
+        assert r.workers()[new] == "left"
+        assert [r.preview(c, m) for c, f, m in SCENES] == before
+        out2 = r.serve(SCENES)
+        assert all(res.error is None for res in out2.values())
+    finally:
+        r.close()
+
+
+def test_router_lifecycle_and_validation(pool):
+    factory, _ = pool
+    with pytest.raises(ValueError, match="n_workers"):
+        ServeRouter(factory, 0)
+    with pytest.raises(ValueError, match="max_replays"):
+        ServeRouter(factory, 1, max_replays=-1)
+    with pytest.raises(ValueError, match="max_backlog"):
+        ServeRouter(factory, 1, max_backlog=0)
+    r = _router(factory, 1)
+    with pytest.raises(KeyError):
+        r.remove_worker("nope")
+    with pytest.raises(ValueError, match="already exists"):
+        r.add_worker("w0")
+    r.close()
+    r.close()                               # idempotent
+    c, f, m = SCENES[0]
+    rid = r.submit(c, f, m)                 # post-close: typed rejected
+    res = {x.rid: x for x in r.poll()}[rid]
+    assert res.error.code == FLT.REJECTED
+    with pytest.raises(RuntimeError, match="closed"):
+        r.add_worker()
+
+
+def test_stats_aggregation_shape(pool):
+    factory, _ = pool
+    with _router(factory, 2) as r:
+        r.serve(SCENES)
+        st = r.stats()
+    assert st["n_workers"] == 2 and st["n_submitted"] == len(SCENES)
+    assert st["n_completed"] == len(SCENES) == st["n_ok"]
+    assert st["routed_incomplete"] == 0
+    pc = st["pool_cache"]
+    schedulers = [w["scheduler"] for w in st["workers"].values()]
+    assert pc["mapping_misses"] == sum(s["mapping_cache"]["misses"]
+                                       for s in schedulers)
+    assert pc["assembly_misses"] == sum(s["assembly_cache"]["misses"]
+                                        for s in schedulers)
+    for w in st["workers"].values():
+        assert w["state"] == "live"         # snapshot taken mid-serve
+        assert w["scheduler"]["n_ok"] == w["processed"]
+    for w in r.stats()["workers"].values():
+        assert w["state"] == "left"         # context exit closed the pool
+    assert st["liveness"]["stall_s"] == pytest.approx(
+        st["liveness"]["beat_s"] * st["liveness"]["miss_beats"])
