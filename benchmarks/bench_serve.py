@@ -33,6 +33,20 @@ The fault-tolerance PR adds two rows on the same stream:
                          successful retire (the retry/bisect pipeline
                          restart cost), with the failure counters
 
+The city-scale partition PR adds one more row family on a single
+mid-size city scene (chunked predictions asserted bit-identical to the
+monolithic path first):
+
+  serve/partition_throughput  one row per chunk budget: steady-state
+                         points/s of `segment(partition=)` — octree
+                         chunking over packed keys + exact receptive-
+                         field halos, every chunk served through the
+                         scheduler — with the halo overhead fraction
+                         (halo rows / total served rows) and the
+                         monolithic points/s as the derived baseline.
+                         Smaller budgets mean more chunks and a larger
+                         halo fraction: the row quantifies that tax.
+
 The multi-worker router PR adds two more rows:
 
   serve/router_overhead  single-worker `ServeRouter` vs the bare
@@ -65,7 +79,7 @@ import numpy as np
 import jax
 
 from benchmarks.common import emit
-from repro.data.synthetic import lidar_scene
+from repro.data.synthetic import city_scene, lidar_scene
 from repro.models import minkunet as MU
 from repro.serve.buckets import BucketLadder
 from repro.serve.engine import PointCloudEngine
@@ -256,6 +270,49 @@ def bench_fault_tolerance(n_points: int, reps: int, windows: int,
     return overhead
 
 
+def bench_partition(n_points: int, budgets: tuple[int, ...],
+                    reps: int = 2):
+    """serve/partition_throughput: chunk-streamed `segment(partition=)`
+    points/s per chunk budget on one city scene that itself fits the
+    ladder — so the monolithic path provides both the bit-identity
+    reference and the baseline points/s the halo tax is measured
+    against."""
+    from repro.partition import PartitionPolicy
+    from repro.serve.buckets import geometric_ladder
+
+    params = MU.mini_minkunet_init(jax.random.key(0), c_in=4, n_classes=4)
+    engine = PointCloudEngine(params, n_stages=2, flow="fod",
+                              ladder=geometric_ladder(512, 16384),
+                              max_batch=4, mesh=None)
+    coords, mask, feats = city_scene(seed=29, n_points=n_points)
+    n_valid = int(mask.sum())
+
+    def _time(fn):
+        fn()                                      # compile + cache warmup
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn()
+        return out, (time.perf_counter() - t0) / reps
+
+    ref, mono_s = _time(lambda: engine.segment(coords, mask, feats)[0])
+    mono_pps = n_valid / mono_s
+    ref = np.asarray(ref)
+
+    for budget in budgets:
+        policy = PartitionPolicy(chunk_budget=budget, force=True)
+        got, part_s = _time(lambda: engine.segment(
+            coords, mask, feats, partition=policy)[0])
+        np.testing.assert_array_equal(ref[mask], np.asarray(got)[mask])
+        st = engine.last_partition_stats
+        pps = n_valid / part_s
+        emit("serve/partition_throughput", pps,
+             f"budget={budget};chunks={st['n_chunks']};"
+             f"halo_frac={st['halo_fraction']:.2f};"
+             f"max_chunk={st['max_chunk_points']};"
+             f"mono_pts_per_s={mono_pps:.0f};"
+             f"rel_mono={pps / mono_pps:.4f}x;n={n_valid};parity=ok")
+
+
 def bench_router(n_points: int, reps: int, windows: int,
                  max_batch: int = 4, assert_overhead: bool = True):
     """serve/router_overhead + serve/failover_recovery: the
@@ -379,10 +436,12 @@ def main(argv=None):
                               assert_overhead=False)
         bench_router(n_points=128, reps=3, windows=3,
                      assert_overhead=False)
+        bench_partition(n_points=3000, budgets=(512, 1024), reps=1)
     else:
         bench_hot_loop(n_points=128, reps=6, windows=5)
         bench_fault_tolerance(n_points=128, reps=6, windows=5)
         bench_router(n_points=128, reps=8, windows=5)
+        bench_partition(n_points=12000, budgets=(1024, 2048, 4096))
 
 
 if __name__ == "__main__":

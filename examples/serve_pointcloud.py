@@ -43,21 +43,34 @@ injected fault on its second request, and the driver asserts the
 failover contract — every request completes with predictions, >= 1
 request was replayed onto a survivor, 0 requests lost.
 
+`--partition` is the city-scale smoke: one `--points`-row scene (default
+200000 — an order of magnitude past the top bucket) that the seed path
+must reject with a typed `rejected`/`oversized` result, then complete
+through `segment(partition='auto')` — octree-chunked over packed keys
+with exact receptive-field halos (`repro.partition`), every chunk served
+through the scheduler as an ordinary scene, 0 chunks rejected.  A
+mid-size control scene is additionally served both monolithically and
+force-chunked and must match exactly on every valid row (the halo-
+exactness invariant as a CI assertion).  Partition telemetry (chunk
+count, halo fraction, points/s) lands in `--metrics-json`.
+
 Run:  PYTHONPATH=src python examples/serve_pointcloud.py [--scenes 16]
       [--distinct-scenes 8] [--flow fod] [--max-batch 4]
       [--pipeline-depth 2] [--assembly-cache 16] [--max-wait-s T]
       [--min-hit-rate R] [--metrics-json serve_metrics.json]
       [--inject-faults] [--workers 3] [--kill-worker auto]
+      [--partition --points 200000 --smoke]
 """
 
 import argparse
 import json
 import sys
+import time
 
 import numpy as np
 import jax
 
-from repro.data.synthetic import lidar_scene
+from repro.data.synthetic import city_scene, lidar_scene
 from repro.models import minkunet as MU
 from repro.serve.buckets import geometric_ladder
 from repro.serve.engine import PointCloudEngine
@@ -199,6 +212,90 @@ def run_router(args):
             sys.exit(1)
 
 
+def run_partition(args):
+    """--partition: the city-scale chunk-streaming smoke (see module
+    docstring).  Exit nonzero unless the seed path rejects the big scene
+    as oversized, the partition path completes it with 0 rejected
+    chunks, and forced chunking of a mid-size control scene matches the
+    monolithic predictions exactly on every valid row."""
+    from repro.partition import PartitionPolicy
+    from repro.serve import faults as FLT
+
+    params = MU.mini_minkunet_init(jax.random.key(0), c_in=4, n_classes=2)
+    ladder = geometric_ladder(1024, 16384)
+    engine = PointCloudEngine(params, N_STAGES, flow=args.flow,
+                              ladder=ladder, max_batch=args.max_batch)
+    coords, mask, feats = city_scene(seed=11, n_points=args.points)
+    n_valid = int(mask.sum())
+    print(f"city scene: {coords.shape[0]} rows, {n_valid} valid voxels, "
+          f"ladder top {ladder.capacities[-1]}")
+
+    # the seed path must reject this scene — typed, detail='oversized'
+    sched = engine.scheduler()
+    rid = sched.submit(coords, feats, mask)
+    sched.flush()
+    seed_res = sched.take([rid])[rid]
+    seed_rejected = (seed_res.error is not None
+                     and seed_res.error.code == FLT.REJECTED
+                     and seed_res.error.detail == FLT.OVERSIZED)
+    print(f"seed path: {seed_res.error}")
+
+    t0 = time.perf_counter()
+    preds, _ = engine.segment(coords, mask, feats, partition="auto")
+    elapsed = time.perf_counter() - t0
+    preds = np.asarray(preds)
+    pstats = dict(engine.last_partition_stats)
+    pstats.pop("chunk_points", None)
+    uncovered = int((preds[mask] < 0).sum())
+    print(f"partitioned: {pstats['n_chunks']} chunks (budget "
+          f"{pstats['budget']}, max {pstats['max_chunk_points']} pts, "
+          f"halo {pstats['halo_fraction'] * 100:.1f}%), "
+          f"{pstats['chunk_errors']} chunk errors, {uncovered} uncovered "
+          f"valid rows, {n_valid / elapsed:,.0f} points/s")
+
+    # mid-size control scene: forced chunking == monolithic, exactly
+    c2, m2, f2 = city_scene(seed=13, n_points=args.control_points)
+    mono, _ = engine.segment(c2, m2, f2)
+    part, _ = engine.segment(
+        c2, m2, f2, partition=PartitionPolicy(chunk_budget=1024, force=True))
+    parity = bool(np.array_equal(np.asarray(mono)[m2], np.asarray(part)[m2]))
+    print(f"control parity ({int(m2.sum())} valid rows, "
+          f"{engine.last_partition_stats['n_chunks']} chunks): "
+          f"{'exact' if parity else 'MISMATCH'}")
+
+    if args.metrics_json:
+        metrics = {"n_rows": int(coords.shape[0]), "n_valid": n_valid,
+                   "elapsed_s": elapsed,
+                   "points_per_s": n_valid / elapsed,
+                   "seed_rejected_oversized": seed_rejected,
+                   "uncovered_valid_rows": uncovered,
+                   "control_parity_exact": parity, **pstats,
+                   "scheduler": engine.scheduler().stats()["faults"]}
+        with open(args.metrics_json, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+        print(f"wrote partition metrics to {args.metrics_json}")
+
+    problems = []
+    if not seed_rejected:
+        problems.append(f"seed path did not reject the {args.points}-row "
+                        f"scene as oversized (got {seed_res.error})")
+    if pstats["chunk_errors"]:
+        problems.append(f"{pstats['chunk_errors']} chunks rejected")
+    if uncovered:
+        problems.append(f"{uncovered} valid rows left unpredicted")
+    if not parity:
+        problems.append("chunked control scene diverged from the "
+                        "monolithic predictions")
+    if problems:
+        print("FAIL: partition contract violated: " + "; ".join(problems),
+              file=sys.stderr)
+        if args.smoke:
+            sys.exit(1)
+        return
+    print("partition contract held: oversized scene rejected by the seed "
+          "path, completed chunked with 0 rejected, control scene exact")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenes", type=int, default=16,
@@ -232,7 +329,25 @@ def main():
                     help="router chaos: kill this worker ordinal (or the "
                          "busiest, 'auto') mid-stream and assert the "
                          "failover contract (needs --workers >= 2)")
+    ap.add_argument("--partition", action="store_true",
+                    help="city-scale smoke: serve one oversized scene "
+                         "chunked via segment(partition='auto') and "
+                         "assert seed-path rejection + halo exactness")
+    ap.add_argument("--points", type=int, default=200000,
+                    help="city-scene rows for --partition (should exceed "
+                         "the ladder top so the seed path rejects it)")
+    ap.add_argument("--control-points", type=int, default=4000,
+                    help="mid-size control scene for the chunked-vs-"
+                         "monolithic parity check under --partition")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode for --partition: exit nonzero on any "
+                         "contract violation instead of just reporting")
     args = ap.parse_args()
+    if args.partition and (args.workers or args.inject_faults):
+        ap.error("--partition is its own smoke; it takes no --workers "
+                 "or --inject-faults")
+    if args.partition:
+        return run_partition(args)
     if args.kill_worker is not None and args.workers < 2:
         ap.error("--kill-worker needs --workers >= 2 (a survivor to "
                  "replay onto)")

@@ -63,6 +63,49 @@ def lidar_scene(seed: int, n_points: int, grid: int = 64,
     return coords, mask, feats
 
 
+def city_scene(seed: int, n_points: int, extent: int | None = None,
+               batch_idx: int = 0):
+    """City-block scale LiDAR mock: a large-extent ground sheet plus
+    towers, with roughly `n_points` UNIQUE voxels — `lidar_scene`'s
+    default 64^3 grid saturates near ~40k unique sites, so city-scale
+    partition tests need the extent to grow with the point budget.
+    Returns the same (coords (N, 4) int32, mask, feats (N, 4)) layout;
+    valid rows are the unique voxels actually produced (>= ~0.95 N for
+    the default extent)."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, batch_idx]))
+    if extent is None:
+        # ground sheet capacity ~2.5x the ask so collisions stay rare
+        extent = int(np.ceil(np.sqrt(n_points * 2.5)))
+    m_ground = int(n_points * 1.1)
+    ground = np.stack([rng.integers(0, extent, m_ground),
+                       rng.integers(0, extent, m_ground),
+                       rng.integers(0, 2, m_ground)], axis=1)
+    towers = []
+    n_towers = max(4, n_points // 4000)
+    per = max(16, n_points // (4 * n_towers))
+    for _ in range(n_towers):
+        c = rng.integers(8, max(9, extent - 8), size=2)
+        w = rng.integers(3, 9)
+        h = rng.integers(6, 30)
+        t = np.stack([c[0] + rng.integers(0, w, per),
+                      c[1] + rng.integers(0, w, per),
+                      rng.integers(0, h, per)], axis=1)
+        towers.append(t)
+    pts = np.concatenate([ground, *towers], axis=0)
+    uniq = np.unique(np.clip(pts, 0, extent - 1), axis=0)
+    uniq = uniq[rng.permutation(uniq.shape[0])[:n_points]]
+    n = uniq.shape[0]
+    coords = np.full((n_points, 4), 2**30 - 1, np.int32)
+    coords[:n, 0] = batch_idx
+    coords[:n, 1:] = uniq
+    mask = np.zeros(n_points, bool)
+    mask[:n] = True
+    feats = np.zeros((n_points, 4), np.float32)
+    feats[:n, :3] = uniq / extent - 0.5
+    feats[:n, 3] = rng.random(n)
+    return coords, mask, feats
+
+
 def point_cloud_batch(seed: int, step: int, batch: int, n_points: int,
                       grid: int = 64):
     """Batched scenes flattened into one masked cloud + per-point labels

@@ -263,6 +263,21 @@ def epilogue_dram_bytes(params, levels, fused: bool) -> int:
     return total
 
 
+def halo_spec(params):
+    """Receptive-field spec of this UNet for the partition planner.
+
+    `repro.partition.halo` mirrors the network's conv sites backward to
+    compute exact per-chunk halos; this names what it must mirror: one
+    stem dilation at level 0, two submanifold dilations per residual
+    block at every level each stage touches (encoder and decoder), with
+    the stride-2 down / transposed convs as the level transitions.
+    """
+    from repro.partition.halo import HaloSpec
+    n_stages = len(params["enc"])
+    blocks = len(params["enc"][0]["blocks"]) if n_stages else 0
+    return HaloSpec.uniform(n_stages, blocks)
+
+
 def mini_minkunet_init(key, c_in: int = 4, n_classes: int = 13):
     """The paper's co-designed shallow/narrow MinkowskiUNet (Fig. 16)."""
     return minkunet_init(key, c_in, n_classes, stem=16,

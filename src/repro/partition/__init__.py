@@ -1,0 +1,23 @@
+"""City-scale scene partitioning: octree chunking over packed keys with
+exact halo exchange.
+
+One huge point cloud becomes a stream of bucket-sized, spatially-local
+chunks that flow through the existing serve stack as ordinary scenes; the
+plan stitches per-chunk predictions back into scene order with halo rows
+dropped, and chunked output equals the monolithic output exactly on every
+interior point (the subsystem's headline invariant).
+
+  * `octree`  — recursive packed-key range splitting of the level-0
+    ranking order into budget-bounded chunks (FractalCloud-style, on the
+    62-bit key trie — no extra sort beyond the one ranking pass);
+  * `halo`    — per-chunk needed-input sets from the kernel receptive
+    field across the stride pyramid (binary searches against each
+    level's packed keys — the `kernel_map_v2` machinery, host-side);
+  * `plan`    — `PartitionPlan`: chunks onto the `BucketLadder`, through
+    `ServeScheduler`/`ServeRouter` submit/flush/take, gather + stitch.
+"""
+
+from repro.partition.halo import HaloSpec  # noqa: F401
+from repro.partition.octree import split_ranges  # noqa: F401
+from repro.partition.plan import (  # noqa: F401
+    PartitionPlan, PartitionPolicy, plan_partition)

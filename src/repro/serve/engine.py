@@ -85,6 +85,8 @@ class PointCloudEngine:
         # scheduler built over this engine (None = nothing injected)
         self.fault_plan = fault_plan
         self._scheduler = None
+        # stats() of the most recent segment(partition=) chunk plan
+        self.last_partition_stats = None
 
         def build_one(coords, mask):
             return MU.build_unet_maps(M.PointCloud(coords, mask, 1),
@@ -187,7 +189,7 @@ class PointCloudEngine:
 
     # -- serving entry points ---------------------------------------------
 
-    def segment(self, coords, mask, feats, levels=None):
+    def segment(self, coords, mask, feats, levels=None, partition=None):
         """One scene -> (per-point class ids, mapping_cache_hit).
 
         The scene is padded to its ladder bucket before the jit'd apply
@@ -195,8 +197,28 @@ class PointCloudEngine:
         back to the caller's row count.  Pass `levels` (from
         `levels_for`, built at the same bucket) to skip the cache lookup;
         the returned hit flag is then None.
+
+        `partition` opens the city-scale path: `True`/"auto" (default
+        policy) or a `repro.partition.PartitionPolicy`.  A scene too big
+        for the ladder — which the seed path rejects — is then octree-
+        chunked over its packed keys with exact receptive-field halos
+        (`repro.partition`), each chunk served through the engine's
+        scheduler as an ordinary scene, and the predictions stitched back
+        into the caller's row order (halo rows dropped; rows outside
+        every chunk, i.e. masked-invalid rows, come back as -1).  Chunked
+        output equals the monolithic output on every valid row; a policy
+        with `force=True` partitions even scenes that fit the ladder
+        (parity tests and benchmarks rely on it).  The hit flag is True
+        only when every chunk's pyramid came from the mapping cache.
         """
         n = np.asarray(coords).shape[0]
+        if partition is not None:
+            from repro.partition import PartitionPolicy
+            policy = PartitionPolicy() if partition in (True, "auto") \
+                else partition
+            if policy.force or not self.ladder.fits(n):
+                return self._segment_partitioned(coords, mask, feats,
+                                                 policy)
         cap = self.ladder.bucket_for(n)
         c, m, f = BK.pad_scene(coords, mask, feats, cap)
         hit = None
@@ -205,6 +227,25 @@ class PointCloudEngine:
         preds = self._apply(levels, jnp.asarray(c), jnp.asarray(m),
                             jnp.asarray(f))
         return preds[:n], hit
+
+    def _segment_partitioned(self, coords, mask, feats, policy):
+        """Chunk-stream one oversized scene through the scheduler and
+        stitch (see `segment(partition=)`).  Chunk plan telemetry lands
+        in `self.last_partition_stats`."""
+        from repro.partition import plan_partition
+        spec = MU.halo_spec(self.params)
+        plan = plan_partition(coords, mask, feats, spec=spec,
+                              ladder=self.ladder, policy=policy)
+        preds, hit, errors = plan.run(self.scheduler())
+        self.last_partition_stats = plan.stats()
+        self.last_partition_stats["chunk_errors"] = len(errors)
+        if errors:
+            detail = "; ".join(f"chunk {i}: {err}"
+                               for i, err in sorted(errors.items()))
+            raise RuntimeError(
+                f"segment(partition=): {len(errors)}/{plan.n_chunks} "
+                f"chunks failed — {detail}")
+        return jnp.asarray(preds), hit
 
     def segment_batch(self, coords, mask, feats, on_error: str = "raise"):
         """(B, N, 1+D) scenes -> ((B, N) class ids, mapping_cache_hit).

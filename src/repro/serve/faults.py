@@ -63,13 +63,23 @@ SHED = "shed"
 EXEC_FAILED = "exec_failed"
 ERROR_CODES = (REJECTED, TIMEOUT, SHED, EXEC_FAILED)
 
+# `rejected` detail codes: a MALFORMED scene can never be served (bad
+# shapes/dtypes/values), an OVERSIZED one is well-formed but exceeds the
+# ladder — resubmittable through the partition path.  Triage dispatches
+# on the detail, not on message text.
+OVERSIZED = "oversized"
+MALFORMED = "malformed"
+
 
 @dataclasses.dataclass(frozen=True)
 class ServeError:
-    """Typed failure a `ServeResult` carries instead of predictions."""
+    """Typed failure a `ServeResult` carries instead of predictions.
+    `detail` refines `rejected` results (`oversized` vs `malformed`);
+    None elsewhere."""
 
     code: str                   # one of ERROR_CODES
     message: str
+    detail: str | None = None
 
     def __post_init__(self):
         if self.code not in ERROR_CODES:
@@ -82,14 +92,18 @@ class ServeError:
 
 class AdmissionError(ValueError):
     """A scene failed admission validation; `code` is the ServeError
-    code the scheduler should complete the request with."""
+    code the scheduler should complete the request with, `detail` the
+    rejection class (`oversized` scenes can be replayed through the
+    partition path, `malformed` ones cannot)."""
 
-    def __init__(self, message: str, code: str = REJECTED):
+    def __init__(self, message: str, code: str = REJECTED,
+                 detail: str = MALFORMED):
         super().__init__(message)
         self.code = code
+        self.detail = detail
 
     def as_error(self) -> ServeError:
-        return ServeError(self.code, str(self))
+        return ServeError(self.code, str(self), self.detail)
 
 
 class InjectedFault(RuntimeError):
@@ -192,8 +206,16 @@ def validate_scene(coords, feats, mask, ladder, *,
 
     try:
         cap = ladder.bucket_for(n)
-    except ValueError as e:             # oversized vs the top bucket
-        raise AdmissionError(str(e))
+    except ValueError:                  # oversized vs the top bucket
+        raise AdmissionError(
+            f"scene has {n} rows and exceeds the bucket ladder, which "
+            f"tops out at {ladder.capacities[-1]} (buckets "
+            f"{ladder.capacities}; the packed-key budget itself allows "
+            f"batches 0..{PK.BATCH_MAX} x coords "
+            f"{PK.COORD_MIN}..{PK.COORD_MAX}); extend the ladder, or "
+            f"serve it chunked via "
+            f"PointCloudEngine.segment(partition='auto')",
+            detail=OVERSIZED)
     return coords, mask, feats, n, cap
 
 

@@ -297,6 +297,36 @@ def test_mapping_cache_distinguishes_dtype_and_shape():
     assert not hit
 
 
+def test_geometry_digest_near_duplicates():
+    """Near-duplicate scenes, pinned at the digest level.
+
+    A row permutation of the same coordinate SET is a different padded
+    scene — kernel maps are row-indexed, so reusing the permuted scene's
+    pyramid would scatter predictions to the wrong rows.  The digest
+    must differ.  Features, by contrast, are NOT geometry: a re-scored
+    frame (same coords+mask, new feats) shares the cached pyramid —
+    `PointCloudEngine.scene_key` hashes only (coords, mask, bucket)."""
+    coords, mask, _ = _scene(seed=21)
+    c, m = np.asarray(coords), np.asarray(mask)
+    base = MappingCache.digest((c, m))
+    assert MappingCache.digest((c.copy(), m.copy())) == base  # value id
+
+    perm = np.random.default_rng(3).permutation(c.shape[0])
+    assert not np.array_equal(c[perm], c)
+    assert MappingCache.digest((c[perm], m[perm])) != base
+
+    cache = MappingCache()
+    cache.get((c, m), lambda: "pyramid")
+    _, hit = cache.get((c[perm], m[perm]), lambda: "permuted")
+    assert not hit                        # permuted rows: a new entry
+    _, hit = cache.get((c, m), lambda: "unused")
+    assert hit                            # feats never entered the key
+
+    # same geometry under a different serving bucket must not collide
+    assert MappingCache.digest((c, m), extra=("levels", 64)) \
+        != MappingCache.digest((c, m), extra=("levels", 128))
+
+
 # ---------------------------------------------------------------------------
 # batched serving: vmapped entry point == per-scene loop
 # ---------------------------------------------------------------------------
