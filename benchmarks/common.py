@@ -26,8 +26,13 @@ def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
     return float(np.median(ts) * 1e6)
 
 
-def emit(name: str, us_per_call: float, derived: str = ""):
-    ROWS.append((name, us_per_call, derived))
+def emit(name: str, us_per_call: float, derived: str = "",
+         extra: dict | None = None):
+    """Record one benchmark row.  `derived` stays the compact CSV-field
+    summary; `extra` is an optional JSON-native dict (e.g. latency
+    quantiles) carried verbatim into `dump_json` — structured data that
+    would be lossy squeezed into the derived string."""
+    ROWS.append((name, us_per_call, derived, extra))
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
@@ -36,9 +41,14 @@ def header():
 
 
 def dump_json(path: str):
-    """Write every emitted row as JSON: {name: {us_per_call, derived}}.
-    CI archives the file per commit so the perf trajectory is diffable."""
+    """Write every emitted row as JSON: {name: {us_per_call, derived,
+    **extra}}.  CI archives the file per commit so the perf trajectory
+    is diffable."""
+    payload = {}
+    for name, us, derived, extra in ROWS:
+        row = {"us_per_call": us, "derived": derived}
+        if extra:
+            row.update(extra)
+        payload[name] = row
     with open(path, "w") as f:
-        json.dump({name: {"us_per_call": us, "derived": derived}
-                   for name, us, derived in ROWS}, f, indent=2,
-                  sort_keys=True)
+        json.dump(payload, f, indent=2, sort_keys=True)

@@ -54,12 +54,24 @@ force-chunked and must match exactly on every valid row (the halo-
 exactness invariant as a CI assertion).  Partition telemetry (chunk
 count, halo fraction, points/s) lands in `--metrics-json`.
 
+`--trace-out PATH` / `--prom-out PATH` switch on the observability
+stack (`repro.obs`): every request gets a span tree (admission, queue
+wait, assembly, device wait, retire — plus router hops, failover
+replays, and partition chunk fan-out where applicable) and a bounded
+flight recorder rides along, dumping its ring automatically on
+exec_failed / failover / watchdog deadline flushes.  `--trace-out`
+writes the span + dump stream as JSONL (validated against the schema
+before exit — invalid output fails the run), `--prom-out` writes a
+Prometheus text-exposition snapshot of the unified metrics registry.
+Both work in all three modes (bare scheduler, --workers, --partition).
+
 Run:  PYTHONPATH=src python examples/serve_pointcloud.py [--scenes 16]
       [--distinct-scenes 8] [--flow fod] [--max-batch 4]
       [--pipeline-depth 2] [--assembly-cache 16] [--max-wait-s T]
       [--min-hit-rate R] [--metrics-json serve_metrics.json]
       [--inject-faults] [--workers 3] [--kill-worker auto]
       [--partition --points 200000 --smoke]
+      [--trace-out serve_trace.jsonl] [--prom-out serve_metrics.prom]
 """
 
 import argparse
@@ -78,6 +90,40 @@ from repro.serve.scheduler import ServeScheduler
 
 N_STAGES = 2
 SIZE_CYCLE = (384, 640, 900, 1400)     # heterogeneous point counts
+
+
+def _build_obs(args):
+    """Observability handle when --trace-out/--prom-out asked for one
+    (tracer + flight recorder enabled); None keeps the serve stack on
+    its always-on metrics-only default."""
+    if args.trace_out or args.prom_out:
+        from repro.obs import Observability
+        return Observability.enabled()
+    return None
+
+
+def _export_obs(args, obs):
+    """Write the requested exporter artifacts; exit nonzero if the
+    JSONL trace stream fails its own schema validation."""
+    if obs is None:
+        return
+    from repro.obs import (TraceSchemaError, validate_trace_jsonl,
+                           write_prometheus, write_trace_jsonl)
+    if args.trace_out:
+        n = write_trace_jsonl(args.trace_out, obs.tracer,
+                              recorder=obs.recorder)
+        try:
+            report = validate_trace_jsonl(args.trace_out)
+        except TraceSchemaError as e:
+            print(f"FAIL: {args.trace_out} failed trace-schema "
+                  f"validation: {e}", file=sys.stderr)
+            sys.exit(1)
+        print(f"wrote {n} trace records to {args.trace_out} "
+              f"({report['traces']} traces, {report['closed_traces']} "
+              f"closed, {report['dumps']} flight-recorder dumps)")
+    if args.prom_out:
+        write_prometheus(args.prom_out, obs.registry)
+        print(f"wrote Prometheus snapshot to {args.prom_out}")
 
 
 def _stream(args):
@@ -104,13 +150,14 @@ def run_router(args):
     factory = PointCloudEngine.factory(params, N_STAGES, flow=args.flow,
                                        ladder=geometric_ladder(512, 2048))
     scenes = _stream(args)
+    obs = _build_obs(args)
 
-    def build(plan):
+    def build(plan, obs=None):
         return ServeRouter(factory, args.workers, fault_plan=plan,
                            max_batch=args.max_batch,
                            pipeline_depth=args.pipeline_depth,
                            assembly_cache_entries=args.assembly_cache,
-                           max_wait_s=args.max_wait_s)
+                           max_wait_s=args.max_wait_s, obs=obs)
 
     plan = None
     kill_ordinal = None
@@ -134,7 +181,7 @@ def run_router(args):
         print(f"chaos: killing worker ordinal {kill_ordinal} on its "
               f"2nd request")
 
-    router = build(plan)
+    router = build(plan, obs=obs)
     rids = {}
     for coords, feats, mask, labels in scenes:
         rids[router.submit(coords, feats, mask)] = (mask, labels)
@@ -176,6 +223,7 @@ def run_router(args):
         with open(args.metrics_json, "w") as f:
             json.dump(stats, f, indent=2, sort_keys=True)
         print(f"wrote router metrics to {args.metrics_json}")
+    _export_obs(args, obs)
 
     if args.kill_worker is not None:
         problems = []
@@ -223,8 +271,10 @@ def run_partition(args):
 
     params = MU.mini_minkunet_init(jax.random.key(0), c_in=4, n_classes=2)
     ladder = geometric_ladder(1024, 16384)
+    obs = _build_obs(args)
     engine = PointCloudEngine(params, N_STAGES, flow=args.flow,
-                              ladder=ladder, max_batch=args.max_batch)
+                              ladder=ladder, max_batch=args.max_batch,
+                              obs=obs)
     coords, mask, feats = city_scene(seed=11, n_points=args.points)
     n_valid = int(mask.sum())
     print(f"city scene: {coords.shape[0]} rows, {n_valid} valid voxels, "
@@ -274,6 +324,7 @@ def run_partition(args):
         with open(args.metrics_json, "w") as f:
             json.dump(metrics, f, indent=2, sort_keys=True)
         print(f"wrote partition metrics to {args.metrics_json}")
+    _export_obs(args, obs)
 
     problems = []
     if not seed_rejected:
@@ -342,6 +393,13 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode for --partition: exit nonzero on any "
                          "contract violation instead of just reporting")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable span tracing + flight recorder and "
+                         "write the trace stream as schema-validated "
+                         "JSONL (CI artifact)")
+    ap.add_argument("--prom-out", default=None, metavar="PATH",
+                    help="write a Prometheus text-exposition snapshot "
+                         "of the serve metrics registry (CI artifact)")
     args = ap.parse_args()
     if args.partition and (args.workers or args.inject_faults):
         ap.error("--partition is its own smoke; it takes no --workers "
@@ -366,12 +424,14 @@ def main():
         plan = FaultPlan(fail_dispatches={1}, corrupt_scenes={2})
 
     params = MU.mini_minkunet_init(jax.random.key(0), c_in=4, n_classes=2)
+    obs = _build_obs(args)
     engine = PointCloudEngine(params, N_STAGES, flow=args.flow,
                               ladder=geometric_ladder(512, 2048))
     sched = ServeScheduler(engine, max_batch=args.max_batch,
                            pipeline_depth=args.pipeline_depth,
                            assembly_cache_entries=args.assembly_cache,
-                           max_wait_s=args.max_wait_s, fault_plan=plan)
+                           max_wait_s=args.max_wait_s, fault_plan=plan,
+                           obs=obs)
 
     scenes = {}
     for coords, feats, mask, labels in _stream(args):
@@ -434,6 +494,7 @@ def main():
         with open(args.metrics_json, "w") as f:
             json.dump(stats, f, indent=2, sort_keys=True)
         print(f"wrote scheduler metrics to {args.metrics_json}")
+    _export_obs(args, obs)
 
     if args.inject_faults:
         n_expected = args.scenes + 1

@@ -27,6 +27,7 @@ row.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
@@ -116,7 +117,7 @@ class PartitionPlan:
             out[chunk.rows[sel]] = preds[sel]
         return out
 
-    def run(self, target):
+    def run(self, target, tracer=None, trace_id=None):
         """Serve every chunk through `target` (a `ServeScheduler` or
         `ServeRouter`: anything with submit/flush/take) and stitch.
 
@@ -124,16 +125,32 @@ class PartitionPlan:
         (-1 on rows of failed chunks), whether every completed chunk's
         pyramid came from the mapping cache, and {chunk_index:
         ServeError} for chunks that completed with a typed error.
+
+        With a `repro.obs.SpanTracer` and a begun `trace_id`, the
+        fan-out and stitch phases land as spans on that trace (each
+        chunk additionally owns an ordinary per-request trace in the
+        target's scheduler; the fan-out span carries their rids for
+        cross-referencing).
         """
+        tr = tracer if trace_id is not None else None
+        t0 = time.monotonic()
         rids = [target.submit(c.coords, c.feats, c.mask)
                 for c in self.chunks]
+        if tr is not None:
+            tr.span(trace_id, "chunk_fanout", t_start=t0,
+                    t_end=time.monotonic(), n_chunks=len(self.chunks),
+                    rids=list(rids))
         target.flush()
         by_rid = target.take(rids)
         errors = {i: by_rid[r].error for i, r in enumerate(rids)
                   if by_rid[r].error is not None}
+        t1 = time.monotonic()
         preds = self.stitch([None if i in errors
                              else by_rid[r].preds
                              for i, r in enumerate(rids)])
+        if tr is not None:
+            tr.span(trace_id, "stitch", t_start=t1,
+                    t_end=time.monotonic(), n_errors=len(errors))
         hit = all(by_rid[r].mapping_hit for i, r in enumerate(rids)
                   if i not in errors) if len(errors) < len(rids) else False
         return preds, hit, errors

@@ -72,7 +72,8 @@ class PointCloudEngine:
     def __init__(self, params, n_stages: int, flow: str = "fod",
                  engine: Optional[str] = None, cache_entries: int = 32,
                  ladder: Optional[BK.BucketLadder] = None,
-                 max_batch=None, mesh="auto", fault_plan=None):
+                 max_batch=None, mesh="auto", fault_plan=None,
+                 obs=None):
         _silence_cpu_donation_warning()
         self.session = PointAccSession(flow=flow, engine=engine,
                                        cache_entries=cache_entries)
@@ -84,6 +85,11 @@ class PointCloudEngine:
         # chaos seam: a serve.faults.FaultPlan picked up by every
         # scheduler built over this engine (None = nothing injected)
         self.fault_plan = fault_plan
+        # observability bundle (repro.obs.Observability) picked up by
+        # the lazy default scheduler and the partition path; None keeps
+        # both on their private metrics-only default
+        self.obs = obs
+        self._n_partitions = 0
         self._scheduler = None
         # stats() of the most recent segment(partition=) chunk plan
         self.last_partition_stats = None
@@ -132,8 +138,9 @@ class PointCloudEngine:
         deadline policy."""
         if self._scheduler is None:
             from repro.serve.scheduler import ServeScheduler
+            kwargs = {} if self.obs is None else {"obs": self.obs}
             self._scheduler = ServeScheduler(self, max_batch=self._max_batch,
-                                             mesh=self._mesh)
+                                             mesh=self._mesh, **kwargs)
         return self._scheduler
 
     # -- mapping ----------------------------------------------------------
@@ -236,7 +243,18 @@ class PointCloudEngine:
         spec = MU.halo_spec(self.params)
         plan = plan_partition(coords, mask, feats, spec=spec,
                               ladder=self.ladder, policy=policy)
-        preds, hit, errors = plan.run(self.scheduler())
+        tracer = self.obs.tracer if self.obs is not None else None
+        tid = None
+        if tracer is not None:
+            self._n_partitions += 1
+            tid = f"partition:{self._n_partitions}"
+            tracer.begin(tid, name="partition",
+                         n_chunks=plan.n_chunks,
+                         n_rows=int(plan.n_rows))
+        preds, hit, errors = plan.run(self.scheduler(), tracer, tid)
+        if tracer is not None:
+            tracer.end(tid, outcome="ok" if not errors else "chunk_errors",
+                       n_errors=len(errors))
         self.last_partition_stats = plan.stats()
         self.last_partition_stats["chunk_errors"] = len(errors)
         if errors:

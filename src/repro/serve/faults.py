@@ -54,6 +54,7 @@ import numpy as np
 
 from repro.core import mapping as M
 from repro.core import packed as PK
+from repro.obs import metrics as MX
 
 # -- error taxonomy ---------------------------------------------------------
 
@@ -284,12 +285,17 @@ class FaultPlan:
         self._lock = threading.Lock()
         self._wake = threading.Event()
         self._hung: set = set()
-        self._n_submits = 0
-        self._n_corrupted = 0
-        self._n_injected = 0
-        self._n_delays = 0
-        self._n_kills = 0
-        self._n_hangs = 0
+        # seam-firing counters live in a private registry (one family,
+        # labeled per seam) — stats() below is the legacy view over it
+        self._mx = MX.MetricsRegistry()
+        fam = self._mx.counter("fault_plan_seam_firings_total",
+                               "chaos seam firings by kind", ("seam",))
+        self._c_submits = fam.labels("submit")
+        self._c_corrupted = fam.labels("corrupt")
+        self._c_injected = fam.labels("fail")
+        self._c_delays = fam.labels("delay")
+        self._c_kills = fam.labels("kill")
+        self._c_hangs = fam.labels("hang")
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -311,11 +317,11 @@ class FaultPlan:
         """Admission seam: corrupt the feats of a planned submit ordinal
         (NaN payload — admission control must catch it)."""
         with self._lock:
-            i = self._n_submits
-            self._n_submits += 1
+            i = self._c_submits.value
+            self._c_submits.inc()
             corrupt = i in self.corrupt_scenes
             if corrupt:
-                self._n_corrupted += 1
+                self._c_corrupted.inc()
         if corrupt:
             # the whole payload goes NaN (a garbage sensor frame): some
             # row is valid whatever the mask, so admission always trips
@@ -330,12 +336,12 @@ class FaultPlan:
         delay = self.delay_buckets.get(int(cap), 0.0)
         if delay > 0:
             with self._lock:
-                self._n_delays += 1
+                self._c_delays.inc()
             self._wake.wait(delay)
         poisoned = self.poison_rids.intersection(int(r) for r in rids)
         if int(dispatch_id) in self.fail_dispatches or poisoned:
             with self._lock:
-                self._n_injected += 1
+                self._c_injected.inc()
             raise InjectedFault(
                 f"injected dispatch failure (dispatch {dispatch_id}, "
                 f"bucket {cap}, rids {sorted(int(r) for r in rids)}"
@@ -362,12 +368,12 @@ class FaultPlan:
                 fire = step >= 1 and worker not in self._hung
                 if fire:
                     self._hung.add(worker)
-                    self._n_hangs += 1
+                    self._c_hangs.inc()
             if fire:
                 self._wake.wait(hang)
         if self.kill_workers.get(worker) == step:
             with self._lock:
-                self._n_kills += 1
+                self._c_kills.inc()
             raise InjectedFault(
                 f"injected worker kill (worker {worker}, step {step})")
 
@@ -375,9 +381,9 @@ class FaultPlan:
 
     def stats(self) -> dict:
         with self._lock:
-            return {"submits_seen": self._n_submits,
-                    "scenes_corrupted": self._n_corrupted,
-                    "failures_injected": self._n_injected,
-                    "delays_injected": self._n_delays,
-                    "workers_killed": self._n_kills,
-                    "workers_hung": self._n_hangs}
+            return {"submits_seen": self._c_submits.value,
+                    "scenes_corrupted": self._c_corrupted.value,
+                    "failures_injected": self._c_injected.value,
+                    "delays_injected": self._c_delays.value,
+                    "workers_killed": self._c_kills.value,
+                    "workers_hung": self._c_hangs.value}

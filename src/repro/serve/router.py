@@ -69,6 +69,7 @@ import numpy as np
 
 from repro.api import MappingCache
 from repro.launch import fault_tolerance as FT
+from repro.obs import Observability
 from repro.serve import buckets as BK
 from repro.serve import faults as FLT
 from repro.serve.faults import ServeError
@@ -256,11 +257,12 @@ class _Worker:
                             else None
                         flush = self._flush_req if item is None else False
                     if item is not None:
-                        rrid, coords, feats, mask, deadline = item
+                        rrid, coords, feats, mask, deadline, tid = item
                         remaining = None if deadline is None else \
                             max(0.0, deadline - time.monotonic())
                         local = self.sched.submit(coords, feats, mask,
-                                                  deadline_s=remaining)
+                                                  deadline_s=remaining,
+                                                  trace_id=tid)
                         with self.cv:
                             self.local_rrid[local] = rrid
                         self.n_processed += 1
@@ -332,6 +334,7 @@ class ServeRouter:
                  max_replays: int = DEFAULT_MAX_REPLAYS,
                  max_backlog: int | None = None,
                  fault_plan: FLT.FaultPlan | None = None,
+                 obs: Observability | None = None,
                  **scheduler_kwargs):
         if n_workers < 1:
             raise ValueError("ServeRouter needs n_workers >= 1 to start "
@@ -357,17 +360,52 @@ class ServeRouter:
         self._routed: dict[int, _Routed] = {}
         self._completed: OrderedDict[int, ServeResult] = OrderedDict()
         self._closed = False
-        # telemetry
-        self._n_submitted = 0
-        self._n_completed = 0
-        self._n_ok = 0
-        self._n_replayed = 0
-        self._n_failovers = 0
-        self._latency_sum = 0.0
-        self._fault_counts = {c: 0 for c in FLT.ERROR_CODES}
+        # telemetry: registry children shared with every worker's
+        # scheduler (the workers bind their own `instance` labels);
+        # tracer/recorder are optional — the same bundle reaches the
+        # workers, so one trace tree spans route -> worker -> failover
+        # replay on a survivor
+        self.obs = obs if obs is not None else Observability()
+        self._tracer = self.obs.tracer
+        self._recorder = self.obs.recorder
+        reg = self.obs.registry
+        inst = "router"
+        self._c_submitted = reg.counter(
+            "serve_requests_submitted_total",
+            "scenes admitted via submit()", ("instance",)).labels(inst)
+        self._c_completed = reg.counter(
+            "serve_requests_completed_total",
+            "requests completed (ok or typed error)",
+            ("instance",)).labels(inst)
+        self._c_ok = reg.counter(
+            "serve_requests_ok_total",
+            "requests completed with predictions", ("instance",)).labels(inst)
+        fam_faults = reg.counter(
+            "serve_faults_total", "typed error results by code",
+            ("instance", "code"))
+        self._c_faults = {c: fam_faults.labels(inst, c)
+                          for c in FLT.ERROR_CODES}
+        self._c_failovers = reg.counter(
+            "serve_failovers_total", "workers declared dead",
+            ("instance",)).labels(inst)
+        self._c_replays = reg.counter(
+            "serve_replays_total",
+            "requests replayed onto surviving workers",
+            ("instance",)).labels(inst)
+        self._h_latency = reg.histogram(
+            "serve_request_latency_seconds",
+            "submit -> predictions (OK results only)",
+            ("instance",)).labels(inst)
+        fam_errlat = reg.histogram(
+            "serve_error_latency_seconds",
+            "submit -> typed error result, by code", ("instance", "code"))
+        self._h_errlat = {c: fam_errlat.labels(inst, c)
+                          for c in FLT.ERROR_CODES}
+        self._g_recovery = reg.gauge(
+            "serve_recovery_seconds",
+            "failover -> last victim resolved", ("instance",)).labels(inst)
         self._recovering: set[int] = set()
         self._t_failover: float | None = None
-        self._recovery_s: float | None = None
 
         for _ in range(n_workers):
             self._add_worker_locked()
@@ -386,7 +424,7 @@ class ServeRouter:
         if name in self._workers:
             raise ValueError(f"worker {name!r} already exists")
         w = _Worker(self, name, ordinal, self.engine_factory(),
-                    self._sched_kwargs)
+                    dict(self._sched_kwargs, obs=self.obs, instance=name))
         self._workers[name] = w
         return w
 
@@ -498,7 +536,12 @@ class ServeRouter:
         with self._lock:
             rrid = self._next_rrid
             self._next_rrid += 1
-            self._n_submitted += 1
+            self._c_submitted.inc()
+            tid = None
+            if self._tracer is not None:
+                tid = f"router:rrid:{rrid}"
+                self._tracer.begin(tid, t=t_submit, rrid=rrid,
+                                   instance="router")
             if self._closed:
                 self._complete_error_locked(
                     rrid, n_points, t_submit,
@@ -520,8 +563,11 @@ class ServeRouter:
             routed = _Routed(rrid, salt, coords, feats, mask, n_points,
                              deadline, t_submit, w)
             self._routed[rrid] = routed
+            if self._tracer is not None:
+                self._tracer.span(tid, "route", t_start=t_submit,
+                                  t_end=time.monotonic(), worker=w.name)
             w.assigned += 1
-            w.enqueue((rrid, coords, feats, mask, deadline))
+            w.enqueue((rrid, coords, feats, mask, deadline, tid))
             return rrid
 
     # -- completion --------------------------------------------------------
@@ -531,32 +577,46 @@ class ServeRouter:
         routed.worker.assigned -= 1
         del self._routed[routed.rrid]
         self._completed[routed.rrid] = result
-        self._n_completed += 1
+        self._c_completed.inc()
         if result.error is None:
-            self._n_ok += 1
-            self._latency_sum += result.latency_s
+            self._c_ok.inc()
+            self._h_latency.observe(result.latency_s)
         else:
-            self._fault_counts[result.error.code] += 1
+            self._c_faults[result.error.code].inc()
+            self._h_errlat[result.error.code].observe(result.latency_s)
+        if self._tracer is not None:
+            self._tracer.end(
+                f"router:rrid:{routed.rrid}",
+                outcome="ok" if result.error is None
+                else result.error.code)
         if self._recovering:
             self._recovering.discard(routed.rrid)
             if not self._recovering and self._t_failover is not None:
-                self._recovery_s = time.monotonic() - self._t_failover
+                self._g_recovery.set(time.monotonic() - self._t_failover)
                 self._t_failover = None
         self._done.notify_all()
 
     def _complete_error_locked(self, rrid: int, n_points: int,
                                t_submit: float, err: ServeError) -> None:
         """Terminate a request the router itself refuses (shed / closed
-        / replay exhaustion) — same result shape as the scheduler's."""
+        / replay exhaustion) — same result shape as the scheduler's.
+        The wait lands in the per-code error histogram (error-path
+        latency used to vanish from the ok-only average)."""
+        lat = time.monotonic() - t_submit
         self._completed[rrid] = ServeResult(
-            rrid, None, int(n_points), -1, 0.0, False,
-            time.monotonic() - t_submit, err)
-        self._n_completed += 1
-        self._fault_counts[err.code] += 1
+            rrid, None, int(n_points), -1, 0.0, False, lat, err)
+        self._c_completed.inc()
+        self._c_faults[err.code].inc()
+        self._h_errlat[err.code].observe(lat)
+        if self._tracer is not None:
+            tid = f"router:rrid:{rrid}"
+            self._tracer.event(tid, "error", code=err.code,
+                               message=err.message)
+            self._tracer.end(tid, outcome=err.code)
         if self._recovering:
             self._recovering.discard(rrid)
             if not self._recovering and self._t_failover is not None:
-                self._recovery_s = time.monotonic() - self._t_failover
+                self._g_recovery.set(time.monotonic() - self._t_failover)
                 self._t_failover = None
         self._done.notify_all()
 
@@ -606,7 +666,7 @@ class ServeRouter:
             return
         w.state = DEAD
         w.reason = reason
-        self._n_failovers += 1
+        self._c_failovers.inc()
         t_death = time.monotonic()
         w.abandon()
         try:                            # non-blocking salvage
@@ -614,12 +674,23 @@ class ServeRouter:
         except Exception:
             pass
         victims = [r for r in self._routed.values() if r.worker is w]
+        if self._recorder is not None:
+            self._recorder.record(
+                "failover", worker=w.name, reason=reason,
+                victims=[r.rrid for r in victims], instance="router")
+            # one post-mortem snapshot per dead worker — ten stranded
+            # requests still produce ONE dump
+            self._recorder.dump("failover", key=("failover", w.name))
         if victims:
             self._recovering.update(r.rrid for r in victims)
             if self._t_failover is None:
                 self._t_failover = t_death
         for r in victims:
             r.attempts += 1
+            if self._tracer is not None:
+                self._tracer.event(f"router:rrid:{r.rrid}", "failover",
+                                   t=t_death, worker=w.name,
+                                   reason=reason, attempts=r.attempts)
             if r.attempts > self.max_replays:
                 self._complete_locked(r, ServeResult(
                     r.rrid, None, r.n_points, -1, 0.0, False,
@@ -641,8 +712,17 @@ class ServeRouter:
             w.assigned -= 1
             nw.assigned += 1
             r.worker = nw
-            self._n_replayed += 1
-            nw.enqueue((r.rrid, r.coords, r.feats, r.mask, r.deadline))
+            self._c_replays.inc()
+            tid = None
+            if self._tracer is not None:
+                tid = f"router:rrid:{r.rrid}"
+                self._tracer.event(tid, "replay", worker=nw.name,
+                                   attempts=r.attempts)
+            if self._recorder is not None:
+                self._recorder.record("replay", rrid=r.rrid,
+                                      worker=nw.name, instance="router")
+            nw.enqueue((r.rrid, r.coords, r.feats, r.mask, r.deadline,
+                        tid))
 
     # -- waiting helpers ---------------------------------------------------
 
@@ -793,17 +873,19 @@ class ServeRouter:
                     "scheduler": st,
                 }
             lookups = map_hits + map_misses + asm_hits + asm_misses
+            h_lat = self._h_latency
             return {
                 "n_workers": len(self._workers),
                 "n_live": sum(1 for w in self._workers.values()
                               if w.state == LIVE),
                 "workers": workers,
-                "n_submitted": self._n_submitted,
-                "n_completed": self._n_completed,
-                "n_ok": self._n_ok,
+                "n_submitted": self._c_submitted.value,
+                "n_completed": self._c_completed.value,
+                "n_ok": self._c_ok.value,
                 "routed_incomplete": len(self._routed),
-                "latency_avg_s": (self._latency_sum / self._n_ok
-                                  if self._n_ok else 0.0),
+                "latency_avg_s": (h_lat.sum / h_lat.count
+                                  if h_lat.count else 0.0),
+                "latency_quantiles_s": h_lat.quantiles(),
                 "pool_cache": {
                     "mapping_hits": map_hits,
                     "mapping_misses": map_misses,
@@ -813,10 +895,10 @@ class ServeRouter:
                                           if lookups else 0.0),
                 },
                 "faults": {
-                    **self._fault_counts,
-                    "failovers": self._n_failovers,
-                    "replayed": self._n_replayed,
-                    "recovery_s": self._recovery_s,
+                    **{c: m.value for c, m in self._c_faults.items()},
+                    "failovers": self._c_failovers.value,
+                    "replayed": self._c_replays.value,
+                    "recovery_s": self._g_recovery.value,
                 },
                 "liveness": {
                     "beat_s": self.liveness.beat_s,

@@ -84,6 +84,7 @@ from repro.api import AssemblyCache
 from repro.core import mapping as M
 from repro.distributed import sharding as SH
 from repro.launch import fault_tolerance as FT
+from repro.obs import Observability
 from repro.serve import buckets as BK
 from repro.serve import faults as FLT
 from repro.serve.faults import ServeError
@@ -283,7 +284,9 @@ class ServeScheduler:
                  retry_bisect: bool = True,
                  retry_backoff_s: float = 0.0,
                  watchdog_s: float | None = None,
-                 fault_plan: FLT.FaultPlan | None = None):
+                 fault_plan: FLT.FaultPlan | None = None,
+                 obs: Observability | None = None,
+                 instance: str = "scheduler"):
         if pipeline_depth < 0:
             raise ValueError("pipeline_depth must be >= 0")
         if max_retries < 0:
@@ -350,24 +353,89 @@ class ServeScheduler:
         self._coord_dim = None                  # first-seen stream widths
         self._feat_shape = None
         self._has_deadlines = False
-        # telemetry accumulators
-        self._n_submitted = 0
-        self._n_completed = 0
-        self._n_ok = 0                  # completed WITH predictions
-        self._real_points = 0           # valid (unmasked) caller rows
-        self._issued_rows = 0           # bucket rows issued to the device
-        self._scenes = {}               # bucket -> real scenes executed
-        self._batches = {}              # bucket -> micro-batches executed
-        self._dummies = {}              # bucket -> dummy fill scenes
-        self._latency_sum = 0.0
-        self._assembly_s = 0.0          # host time spent assembling
-        self._deadline_flushes = 0
-        self._fault_counts = {c: 0 for c in FLT.ERROR_CODES}
-        self._n_retries = 0             # retry dispatches issued
-        self._backoff_s = 0.0           # total time spent backing off
-        self._n_failed_dispatches = 0
+        # telemetry: every accumulator is a child of the shared metrics
+        # registry (repro.obs), bound once here so the hot path pays one
+        # attribute lookup + inc — stats() below is a bit-compatible
+        # view over these children.  Tracer/recorder stay None unless
+        # the caller opted in (Observability.enabled()).
+        self.obs = obs if obs is not None else Observability()
+        self.instance = str(instance)
+        self._tracer = self.obs.tracer
+        self._recorder = self.obs.recorder
+        reg, inst = self.obs.registry, self.instance
+        self._c_submitted = reg.counter(
+            "serve_requests_submitted_total",
+            "scenes admitted via submit()", ("instance",)).labels(inst)
+        self._c_completed = reg.counter(
+            "serve_requests_completed_total",
+            "requests completed (ok or typed error)",
+            ("instance",)).labels(inst)
+        self._c_ok = reg.counter(
+            "serve_requests_ok_total",
+            "requests completed with predictions", ("instance",)).labels(inst)
+        fam_faults = reg.counter(
+            "serve_faults_total", "typed error results by code",
+            ("instance", "code"))
+        self._c_faults = {c: fam_faults.labels(inst, c)
+                          for c in FLT.ERROR_CODES}
+        self._fam_scenes = reg.counter(
+            "serve_scenes_total", "real scenes executed",
+            ("instance", "bucket"))
+        self._fam_batches = reg.counter(
+            "serve_batches_total", "micro-batches executed",
+            ("instance", "bucket"))
+        self._fam_dummies = reg.counter(
+            "serve_dummy_scenes_total", "dummy fill scenes executed",
+            ("instance", "bucket"))
+        self._m_buckets = {}            # cap -> (scenes, batches, dummies)
+        self._c_points_real = reg.counter(
+            "serve_points_real_total", "valid (unmasked) caller rows",
+            ("instance",)).labels(inst)
+        self._c_rows_issued = reg.counter(
+            "serve_rows_issued_total", "bucket rows issued to the device",
+            ("instance",)).labels(inst)
+        self._c_deadline_flushes = reg.counter(
+            "serve_deadline_flushes_total",
+            "partial batches flushed by max_wait_s", ("instance",)).labels(inst)
+        self._c_failed_dispatches = reg.counter(
+            "serve_failed_dispatches_total",
+            "micro-batch executions that raised", ("instance",)).labels(inst)
+        self._c_retries = reg.counter(
+            "serve_retries_total", "retry dispatches issued",
+            ("instance",)).labels(inst)
+        self._c_backoff = reg.counter(
+            "serve_retry_backoff_seconds_total",
+            "total time spent backing off before retries",
+            ("instance",)).labels(inst)
+        self._g_recovery = reg.gauge(
+            "serve_recovery_seconds",
+            "last failure -> next good retire", ("instance",)).labels(inst)
+        self._h_latency = reg.histogram(
+            "serve_request_latency_seconds",
+            "submit -> predictions (OK results only)",
+            ("instance",)).labels(inst)
+        fam_errlat = reg.histogram(
+            "serve_error_latency_seconds",
+            "submit -> typed error result, by code", ("instance", "code"))
+        self._h_errlat = {c: fam_errlat.labels(inst, c)
+                          for c in FLT.ERROR_CODES}
+        self._h_assembly = reg.histogram(
+            "serve_assembly_seconds", "host assembly time per micro-batch",
+            ("instance",)).labels(inst)
+        self._h_queue_wait = reg.histogram(
+            "serve_queue_wait_seconds", "admission -> dispatch",
+            ("instance",)).labels(inst)
+        reg.gauge("serve_queue_depth", "queued scenes (all buckets)",
+                  ("instance",)).labels(inst).set_function(
+            lambda: sum(len(q) for q in self._queues.values()))
+        reg.gauge("serve_inflight_batches", "dispatched, un-retired slots",
+                  ("instance",)).labels(inst).set_function(
+            lambda: len(self._inflight))
         self._last_failure_t = None
-        self._recovery_s = None         # last failure -> next good retire
+        # trace bookkeeping (only touched when a tracer is wired in)
+        self._rid_trace: dict[int, tuple[str, bool]] = {}  # rid->(tid,owned)
+        self._qspans: dict[int, int] = {}    # rid -> open queue_wait span
+        self._wspans: dict[int, int] = {}    # rid -> open device_wait span
 
         if watchdog_s is None:
             watchdog_s = max_wait_s / 4 if max_wait_s is not None else 0.0
@@ -378,6 +446,18 @@ class ServeScheduler:
     def max_batch_for(self, cap: int) -> int:
         """Micro-batch width of one capacity bucket."""
         return self.max_batch_overrides.get(cap, self.max_batch)
+
+    def _bucket_counters(self, cap: int):
+        """(scenes, batches, dummy_scenes) counter children for one
+        capacity bucket, bound on first dispatch into it."""
+        m = self._m_buckets.get(cap)
+        if m is None:
+            b = str(cap)
+            m = self._m_buckets[cap] = (
+                self._fam_scenes.labels(self.instance, b),
+                self._fam_batches.labels(self.instance, b),
+                self._fam_dummies.labels(self.instance, b))
+        return m
 
     # -- lifecycle --------------------------------------------------------
 
@@ -418,7 +498,8 @@ class ServeScheduler:
     # -- admission --------------------------------------------------------
 
     def submit(self, coords, feats, mask=None,
-               deadline_s: float | None = None) -> int:
+               deadline_s: float | None = None,
+               trace_id: str | None = None) -> int:
         """Admit one scene; returns its request id — ALWAYS.
 
         `coords` (N, 1+D) int32, `feats` (N, C); `mask` defaults to all
@@ -437,6 +518,11 @@ class ServeScheduler:
         `shed` result.  Thread-safe: padding and digesting happen
         outside the lock, so concurrent producers overlap their
         admission work.
+
+        `trace_id` attaches this request's spans to an EXISTING trace
+        (a router began it before enqueueing); the scheduler then never
+        ends that trace's root — the component that began it does.
+        With no tracer wired in (the default) the argument is ignored.
         """
         t_submit = time.monotonic()
         if self.fault_plan is not None:
@@ -471,7 +557,7 @@ class ServeScheduler:
         with self._lock:
             rid = self._next_rid
             self._next_rid += 1
-            self._n_submitted += 1
+            self._c_submitted.inc()
             if err is None and self._closed:
                 err = ServeError(FLT.REJECTED, "scheduler is closed")
             if err is None and self.max_backlog is not None and \
@@ -480,9 +566,27 @@ class ServeScheduler:
                     FLT.SHED,
                     f"bucket {cap} backlog at the max_backlog bound "
                     f"({self.max_backlog} outstanding scenes)")
+            tr = self._tracer
+            if tr is not None:
+                tid = trace_id if trace_id is not None else \
+                    f"{self.instance}:rid:{rid}"
+                tr.begin(tid, t=t_submit, rid=rid, instance=self.instance)
+                self._rid_trace[rid] = (tid, trace_id is None)
+                t_adm = time.monotonic()
+                tr.span(tid, "admission", t_start=t_submit, t_end=t_adm,
+                        bucket=cap, n_points=int(n))
+            if self._recorder is not None:
+                self._recorder.record("submit", rid=rid, bucket=int(cap),
+                                      instance=self.instance,
+                                      rejected=err is not None)
             if err is not None:
                 self._complete_error_locked(rid, n, cap, t_submit, err)
                 return rid
+            if tr is not None:
+                sid = tr.span(tid, "queue_wait", t_start=t_adm,
+                              bucket=cap)
+                if sid is not None:
+                    self._qspans[rid] = sid
             if self._coord_dim is None:
                 self._coord_dim = int(coords.shape[1])
                 self._feat_shape = tuple(np.asarray(feats).shape[1:])
@@ -597,7 +701,7 @@ class ServeScheduler:
                 lambda x: jnp.stack([x] * n_dummy), base)
         return self._dummy_tails[key]
 
-    def _assemble(self, reqs, cap: int, mb: int):
+    def _assemble(self, reqs, cap: int, mb: int, marks: dict = None):
         """Arena + composition-cache assembly: (hits, apply operands).
 
         coords/mask/feats are staged in the bucket's preallocated host
@@ -608,8 +712,13 @@ class ServeScheduler:
         once (real scenes + the pre-stacked dummy tail) and cached.  Only
         feats is re-staged on a hit: it is the one operand the key does
         not cover (same geometry, fresh sensor payload).
+
+        `marks` (tracing only) receives monotonic timestamps for the
+        arena-staging and cache-lookup phases plus the hit flag.
         """
         n_real, n_dummy = len(reqs), mb - len(reqs)
+        if marks is not None:
+            marks["arena_t0"] = time.monotonic()
         arena = self._arenas.get((cap, mb))
         if arena is None:
             arena = self._arenas[(cap, mb)] = _HostArena(
@@ -623,6 +732,8 @@ class ServeScheduler:
         feats_b = jnp.asarray(arena.feats[s])
 
         comp_key = (cap, mb, n_dummy, tuple(r.key for r in reqs))
+        if marks is not None:
+            marks["lookup_t0"] = time.monotonic()
         cached = self.assembly_cache.lookup(comp_key)
         if cached is not None:
             # the whole stacked batch is reused: every scene's mapping
@@ -650,6 +761,9 @@ class ServeScheduler:
                     levels_b, self._dummy_tail(reqs[0], n_dummy))
             self.assembly_cache.put(comp_key,
                                     (levels_b, coords_b, mask_b))
+        if marks is not None:
+            marks["lookup_t1"] = time.monotonic()
+            marks["cache_hit"] = cached is not None
         return hits, (levels_b, coords_b, mask_b, feats_b)
 
     def _assemble_legacy(self, reqs, cap: int, mb: int):
@@ -703,28 +817,42 @@ class ServeScheduler:
         did = self._next_dispatch
         self._next_dispatch += 1
         if retries:
-            self._n_retries += 1
+            self._c_retries.inc()
+        tr = self._tracer
+        t_disp = time.monotonic()
+        marks = {} if tr is not None and not self._legacy_assembly else None
         try:
             t0 = time.perf_counter()
             if self._legacy_assembly:
                 hits, operands = self._assemble_legacy(reqs, cap, mb)
             else:
-                hits, operands = self._assemble(reqs, cap, mb)
-            self._assembly_s += time.perf_counter() - t0
+                hits, operands = self._assemble(reqs, cap, mb, marks)
+            t1 = time.perf_counter()
+            self._h_assembly.observe(t1 - t0)
             preds = self._apply(*operands)
         except Exception as e:
             self._on_slot_failed(
                 _InFlight(cap, list(reqs), [False] * n_real, None,
                           did, retries), e)
             return n_real
+        if tr is not None:
+            self._trace_dispatch(reqs, did, cap, retries, t_disp, marks)
+        if self._recorder is not None:
+            self._recorder.record(
+                "dispatch", dispatch_id=did, bucket=int(cap),
+                n_real=n_real, retries=retries,
+                rids=[r.rid for r in reqs], instance=self.instance)
         self._inflight.append(_InFlight(cap, list(reqs), hits, preds,
                                         did, retries))
 
-        self._real_points += sum(r.n_valid for r in reqs)
-        self._issued_rows += mb * cap
-        self._scenes[cap] = self._scenes.get(cap, 0) + n_real
-        self._batches[cap] = self._batches.get(cap, 0) + 1
-        self._dummies[cap] = self._dummies.get(cap, 0) + (mb - n_real)
+        m_scenes, m_batches, m_dummies = self._bucket_counters(cap)
+        self._c_points_real.inc(sum(r.n_valid for r in reqs))
+        self._c_rows_issued.inc(mb * cap)
+        m_scenes.inc(n_real)
+        m_batches.inc()
+        m_dummies.inc(mb - n_real)
+        for r in reqs:
+            self._h_queue_wait.observe(t_disp - r.t_submit)
 
         if self.pipeline_depth == 0:
             while self._retire_oldest_locked():
@@ -737,6 +865,38 @@ class ServeScheduler:
                     > self.pipeline_depth:
                 self._retire_oldest_locked()
         return n_real
+
+    def _trace_dispatch(self, reqs, did: int, cap: int, retries: int,
+                        t_disp: float, marks: dict | None) -> None:
+        """Per-request dispatch spans (caller holds the lock, tracer is
+        wired in): close the queue_wait span, record the dispatch span
+        with its assembly children, open the device_wait span."""
+        tr = self._tracer
+        t_launch = time.monotonic()
+        for r in reqs:
+            tid_owned = self._rid_trace.get(r.rid)
+            if tid_owned is None:
+                continue
+            tid = tid_owned[0]
+            tr.end_span(tid, self._qspans.pop(r.rid, None), t_end=t_disp)
+            dspan = tr.span(tid, "dispatch", t_start=t_disp,
+                            t_end=t_launch, dispatch_id=did,
+                            bucket=cap, retries=retries)
+            if marks:
+                aspan = tr.span(tid, "assembly", parent=dspan,
+                                t_start=marks["arena_t0"],
+                                t_end=marks["lookup_t1"],
+                                cache_hit=marks["cache_hit"])
+                tr.span(tid, "arena_staging", parent=aspan,
+                        t_start=marks["arena_t0"],
+                        t_end=marks["lookup_t0"])
+                tr.span(tid, "assembly_lookup", parent=aspan,
+                        t_start=marks["lookup_t0"],
+                        t_end=marks["lookup_t1"])
+            sid = tr.span(tid, "device_wait", t_start=t_launch,
+                          dispatch_id=did)
+            if sid is not None:
+                self._wspans[r.rid] = sid
 
     def _wait_slot(self, slot: _InFlight):
         """Block for one slot's device results (runs WITHOUT the lock).
@@ -759,8 +919,25 @@ class ServeScheduler:
         budget completes with a typed `exec_failed` result.  The
         scheduler keeps serving either way.
         """
-        self._n_failed_dispatches += 1
+        self._c_failed_dispatches.inc()
         self._last_failure_t = time.monotonic()
+        if self._tracer is not None:
+            for r in slot.reqs:
+                tid_owned = self._rid_trace.get(r.rid)
+                if tid_owned is not None:
+                    tid = tid_owned[0]
+                    self._tracer.end_span(
+                        tid, self._wspans.pop(r.rid, None),
+                        t_end=self._last_failure_t, failed=True)
+                    self._tracer.event(
+                        tid, "dispatch_failed", t=self._last_failure_t,
+                        dispatch_id=slot.dispatch_id, error=repr(exc))
+        if self._recorder is not None:
+            self._recorder.record(
+                "dispatch_failed", dispatch_id=slot.dispatch_id,
+                bucket=int(slot.cap), rids=[r.rid for r in slot.reqs],
+                retries=slot.retries, error=repr(exc),
+                instance=self.instance)
         retryable, dead = [], []
         for r in slot.reqs:
             a = self._attempts.get(r.rid, 0) + 1
@@ -797,7 +974,7 @@ class ServeScheduler:
             return
         delay = self.retry_backoff_s * (2 ** generation) \
             * (0.5 + random.random())
-        self._backoff_s += delay
+        self._c_backoff.inc(delay)
         self._lock.release()
         try:
             time.sleep(delay)
@@ -861,8 +1038,9 @@ class ServeScheduler:
             return True                 # the slot WAS resolved
         t_done = time.monotonic()
         if self._last_failure_t is not None:
-            self._recovery_s = t_done - self._last_failure_t
+            self._g_recovery.set(t_done - self._last_failure_t)
             self._last_failure_t = None
+        tr = self._tracer
         for i, r in enumerate(slot.reqs):
             lat = t_done - r.t_submit
             self._attempts.pop(r.rid, None)
@@ -872,21 +1050,60 @@ class ServeScheduler:
                 r.rid, preds[i, :r.n_points].astype(np.int32), r.n_points,
                 slot.cap, 1.0 - r.n_valid / slot.cap, bool(slot.hits[i]),
                 lat))
-            self._latency_sum += lat
-        self._n_completed += len(slot.reqs)
-        self._n_ok += len(slot.reqs)
+            self._h_latency.observe(lat)
+            if tr is not None:
+                tid_owned = self._rid_trace.pop(r.rid, None)
+                if tid_owned is not None:
+                    tid, owned = tid_owned
+                    tr.end_span(tid, self._wspans.pop(r.rid, None),
+                                t_end=t_done)
+                    tr.event(tid, "retire", t=t_done,
+                             dispatch_id=slot.dispatch_id)
+                    if owned:
+                        tr.end(tid, t=t_done, outcome="ok")
+        if self._recorder is not None:
+            self._recorder.record(
+                "retire", dispatch_id=slot.dispatch_id,
+                bucket=int(slot.cap), rids=[r.rid for r in slot.reqs],
+                instance=self.instance)
+        self._c_completed.inc(len(slot.reqs))
+        self._c_ok.inc(len(slot.reqs))
         return True
 
     # -- failure completion / deadlines -----------------------------------
 
     def _complete_error_locked(self, rid: int, n_points: int, bucket: int,
                                t_submit: float, err: ServeError) -> None:
-        """Terminate one request with a typed error result."""
+        """Terminate one request with a typed error result.
+
+        The latency lands in the per-code error histogram — the average
+        only ever covered OK results, so shed/timeout/exec_failed wait
+        times used to vanish from telemetry entirely."""
+        now = time.monotonic()
+        lat = now - t_submit
         self._completed.append(ServeResult(
-            rid, None, int(n_points), int(bucket), 0.0, False,
-            time.monotonic() - t_submit, err))
-        self._n_completed += 1
-        self._fault_counts[err.code] += 1
+            rid, None, int(n_points), int(bucket), 0.0, False, lat, err))
+        self._c_completed.inc()
+        self._c_faults[err.code].inc()
+        self._h_errlat[err.code].observe(lat)
+        if self._tracer is not None:
+            tid_owned = self._rid_trace.pop(rid, None)
+            if tid_owned is not None:
+                tid, owned = tid_owned
+                self._tracer.end_span(tid, self._qspans.pop(rid, None),
+                                      t_end=now)
+                self._wspans.pop(rid, None)
+                self._tracer.event(tid, "error", t=now, code=err.code,
+                                   message=err.message)
+                if owned:
+                    self._tracer.end(tid, t=now, outcome=err.code)
+        if self._recorder is not None:
+            self._recorder.record("error", rid=rid, code=err.code,
+                                  bucket=int(bucket),
+                                  instance=self.instance)
+            if err.code == FLT.EXEC_FAILED:
+                self._recorder.dump("exec_failed",
+                                    key=("exec_failed", self.instance, rid))
 
     def _expire_overdue_locked(self) -> None:
         """Convert queued requests whose `deadline_s` elapsed into
@@ -918,11 +1135,13 @@ class ServeScheduler:
                         if r.deadline is not None)
         self._has_deadlines = live > 0
 
-    def _check_deadlines_locked(self) -> None:
+    def _check_deadlines_locked(self, from_watchdog: bool = False) -> None:
         """Deadline policies: expire overdue requests (`deadline_s` ->
         `timeout` results), then the max_wait_s flush — a partial
         micro-batch executes once its oldest queued request exceeds the
-        batching deadline."""
+        batching deadline.  A WATCHDOG-fired flush also snapshots the
+        flight recorder: nobody was polling, so the ring around the
+        stall is the evidence worth keeping."""
         self._expire_overdue_locked()
         if self.max_wait_s is None:
             return
@@ -930,7 +1149,17 @@ class ServeScheduler:
         for cap in list(self._queues):
             q = self._queues[cap]
             if q and now - q[0].t_submit >= self.max_wait_s:
-                self._deadline_flushes += 1
+                self._c_deadline_flushes.inc()
+                if self._recorder is not None:
+                    self._recorder.record(
+                        "deadline_flush", bucket=int(cap),
+                        queued=len(q), from_watchdog=from_watchdog,
+                        instance=self.instance)
+                    if from_watchdog:
+                        self._recorder.dump(
+                            "watchdog_deadline_flush",
+                            key=("wd_flush", self.instance,
+                                 int(self._c_deadline_flushes.value)))
                 self._run_bucket(cap)
 
     def _watchdog_tick(self) -> None:
@@ -942,7 +1171,7 @@ class ServeScheduler:
         with self._lock:
             if self._closed:
                 return
-            self._check_deadlines_locked()
+            self._check_deadlines_locked(from_watchdog=True)
             while self._retire_oldest_locked(only_ready=True):
                 pass
 
@@ -956,33 +1185,37 @@ class ServeScheduler:
         retries, last failure->recovery time)."""
         with self._lock:
             buckets = {}
-            for cap in self._batches:
-                issued = self._scenes[cap] + self._dummies[cap]
+            for cap, (m_scenes, m_batches, m_dummies) in \
+                    self._m_buckets.items():
+                issued = m_scenes.value + m_dummies.value
                 buckets[int(cap)] = {
-                    "scenes": self._scenes[cap],
-                    "batches": self._batches[cap],
-                    "dummy_scenes": self._dummies[cap],
-                    "occupancy": (self._scenes[cap] / issued
+                    "scenes": m_scenes.value,
+                    "batches": m_batches.value,
+                    "dummy_scenes": m_dummies.value,
+                    "occupancy": (m_scenes.value / issued
                                   if issued else 0.0),
                     "max_batch": self.max_batch_for(cap),
                 }
-            overhead = (self._issued_rows / self._real_points - 1.0) \
-                if self._real_points else 0.0
-            n_batches = sum(self._batches.values())
+            real_points = self._c_points_real.value
+            overhead = (self._c_rows_issued.value / real_points - 1.0) \
+                if real_points else 0.0
+            n_batches = self._h_assembly.count
+            assembly_s = self._h_assembly.sum
+            h_lat = self._h_latency
             return {
-                "n_submitted": self._n_submitted,
-                "n_completed": self._n_completed,
-                "n_ok": self._n_ok,
+                "n_submitted": self._c_submitted.value,
+                "n_completed": self._c_completed.value,
+                "n_ok": self._c_ok.value,
                 "queue_depth": sum(len(q) for q in self._queues.values()),
                 "in_flight": len(self._inflight),
                 "padding_overhead": overhead,
                 "mapping_cache": self.engine.cache_stats(),
                 "assembly_cache": (self.assembly_cache.stats()
                                    if self.assembly_cache else None),
-                "assembly_time_s": self._assembly_s,
-                "assembly_time_per_batch_s": (self._assembly_s / n_batches
+                "assembly_time_s": assembly_s,
+                "assembly_time_per_batch_s": (assembly_s / n_batches
                                               if n_batches else 0.0),
-                "deadline_flushes": self._deadline_flushes,
+                "deadline_flushes": self._c_deadline_flushes.value,
                 "buckets": buckets,
                 "max_batch": self.max_batch,
                 "max_batch_overrides": dict(self.max_batch_overrides),
@@ -993,14 +1226,15 @@ class ServeScheduler:
                     "build": _jit_cache_size(self.engine._build),
                     "apply_batch": _jit_cache_size(self._apply),
                 },
-                "latency_avg_s": (self._latency_sum / self._n_ok
-                                  if self._n_ok else 0.0),
+                "latency_avg_s": (h_lat.sum / h_lat.count
+                                  if h_lat.count else 0.0),
+                "latency_quantiles_s": h_lat.quantiles(),
                 "faults": {
-                    **self._fault_counts,
-                    "failed_dispatches": self._n_failed_dispatches,
-                    "retries": self._n_retries,
-                    "retry_backoff_s": self._backoff_s,
-                    "recovery_s": self._recovery_s,
+                    **{c: m.value for c, m in self._c_faults.items()},
+                    "failed_dispatches": self._c_failed_dispatches.value,
+                    "retries": self._c_retries.value,
+                    "retry_backoff_s": float(self._c_backoff.value),
+                    "recovery_s": self._g_recovery.value,
                 },
                 "watchdog": self._watchdog is not None,
                 "closed": self._closed,
