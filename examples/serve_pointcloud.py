@@ -54,6 +54,20 @@ force-chunked and must match exactly on every valid row (the halo-
 exactness invariant as a CI assertion).  Partition telemetry (chunk
 count, halo fraction, points/s) lands in `--metrics-json`.
 
+`--storm` is the overload-control smoke: a single-bucket stream offered
+at 2x the (chaos-throttled) service rate — `FaultPlan.storm_buckets`
+paces the device to a deterministic batch rate — served through a
+scheduler with the SLO-aware `OverloadController` attached
+(`overload=`).  Every request carries `deadline_s = --slo-s`, priorities
+alternate to exercise the EDF lanes, and the driver asserts the
+overload contract: every request completes (conservation: submitted ==
+ok + shed + timeout + rejected), zero exec_failed, >= 1 request shed
+with a `retry_after_s` backpressure hint, and the p95 latency of the
+requests that DID complete stays within the SLO — overload degrades
+into typed sheds, never into blown latency for admitted work.  Stats
+(including the controller's rate estimates, brownout level, and breaker
+states) land in `--metrics-json`.
+
 `--trace-out PATH` / `--prom-out PATH` switch on the observability
 stack (`repro.obs`): every request gets a span tree (admission, queue
 wait, assembly, device wait, retire — plus router hops, failover
@@ -71,6 +85,7 @@ Run:  PYTHONPATH=src python examples/serve_pointcloud.py [--scenes 16]
       [--min-hit-rate R] [--metrics-json serve_metrics.json]
       [--inject-faults] [--workers 3] [--kill-worker auto]
       [--partition --points 200000 --smoke]
+      [--storm --scenes 72 --storm-rate 4 --slo-s 2.0]
       [--trace-out serve_trace.jsonl] [--prom-out serve_metrics.prom]
 """
 
@@ -347,6 +362,122 @@ def run_partition(args):
           "path, completed chunked with 0 rejected, control scene exact")
 
 
+def run_storm(args):
+    """--storm: the overload-control smoke (see module docstring).
+    Exit nonzero unless the controller turns a sustained 2x overload
+    into typed sheds with retry hints while the completed requests'
+    p95 latency stays within the SLO."""
+    from repro.serve.faults import FaultPlan
+    from repro.serve.overload import OverloadPolicy, ServeSLO
+
+    params = MU.mini_minkunet_init(jax.random.key(0), c_in=4, n_classes=2)
+    obs = _build_obs(args)
+    ladder = geometric_ladder(512, 2048)
+    engine = PointCloudEngine(params, N_STAGES, flow=args.flow,
+                              ladder=ladder, max_batch=args.max_batch,
+                              obs=obs)
+    # one geometry size -> one bucket, so the storm's paced service
+    # rate (and with it the offered-load multiple) is exact
+    n, bucket = 640, ladder.bucket_for(640)
+    capacity = args.storm_rate * args.max_batch
+    plan = FaultPlan(storm_buckets={bucket: args.storm_rate})
+    policy = OverloadPolicy(
+        slo=ServeSLO(deadline_headroom_s=0.5 * args.slo_s), tick_s=0.02)
+    sched = ServeScheduler(engine, max_batch=args.max_batch,
+                           pipeline_depth=16, max_backlog=64,
+                           assembly_cache_entries=args.assembly_cache,
+                           max_wait_s=0.05, fault_plan=plan,
+                           overload=policy, obs=obs, instance="storm")
+    print(f"storm: bucket {bucket} throttled to {args.storm_rate:.0f} "
+          f"micro-batches/s ({capacity:.0f} scenes/s), offering 2x with "
+          f"deadline_s={args.slo_s}")
+
+    dist = max(1, args.distinct_scenes)
+    geoms = [lidar_scene(seed=7 + g, n_points=n, grid=48)
+             for g in range(dist)]
+    for coords, mask, feats in geoms:          # un-timed compile warmup
+        sched.submit(coords, feats, mask)
+    sched.flush()
+    sched.drain()
+
+    pace_s = 1.0 / (2.0 * capacity)
+    rids = []
+    t0 = time.perf_counter()
+    for i in range(args.scenes):
+        coords, mask, feats = geoms[i % dist]
+        rids.append(sched.submit(coords, feats, mask,
+                                 deadline_s=args.slo_s, priority=i % 2))
+        time.sleep(pace_s)
+    sched.flush()
+    out = sched.take(rids)
+    wall = time.perf_counter() - t0
+
+    stats = sched.stats()
+    ov = sched.overload.stats()
+    sched.close()
+    ok = [r for r in out.values() if r.ok]
+    shed = [r for r in out.values()
+            if r.error is not None and r.error.code == "shed"]
+    lat = np.sort([r.latency_s for r in ok]) if ok else np.empty(0)
+    p50 = float(lat[int(0.50 * (len(lat) - 1))]) if len(lat) else None
+    p95 = float(lat[int(0.95 * (len(lat) - 1))]) if len(lat) else None
+    good = sum(1 for r in ok if r.latency_s <= args.slo_s)
+    ft = stats["faults"]
+    print(f"storm served {len(ok)}/{args.scenes} within-capacity scenes "
+          f"in {wall:.2f}s (goodput {good / wall:.1f}/s of "
+          f"{capacity:.0f}/s capacity): {ft['shed']} shed, "
+          f"{ft['timeout']} timeout, {ft['exec_failed']} exec_failed"
+          + (f"; ok p50 {p50 * 1e3:.0f} ms, p95 {p95 * 1e3:.0f} ms"
+             if len(lat) else ""))
+    print(f"controller: level {ov['level']} "
+          f"({ov['transitions']} brownout transitions), service rate "
+          + ", ".join(f"{c}: {r:.1f}/s"
+                      for c, r in ov["service_rate"].items())
+          + f", effective bound {ov['effective_backlog']}")
+
+    if args.metrics_json:
+        dump = dict(stats, overload=ov, fault_plan=plan.stats(),
+                    storm={"wall_s": wall, "offered": args.scenes,
+                           "capacity_per_s": capacity,
+                           "goodput_per_s": good / wall,
+                           "slo_s": args.slo_s,
+                           "ok_p50_s": p50, "ok_p95_s": p95})
+        with open(args.metrics_json, "w") as f:
+            json.dump(dump, f, indent=2, sort_keys=True)
+        print(f"wrote storm metrics to {args.metrics_json}")
+    _export_obs(args, obs)
+
+    problems = []
+    if len(out) != args.scenes:
+        problems.append(f"{len(out)}/{args.scenes} requests resolved "
+                        f"(lost requests)")
+    accounted = (len(ok) + ft["shed"] + ft["timeout"] + ft["rejected"])
+    if accounted != args.scenes:
+        problems.append(f"accounting leak: {len(ok)} ok + {ft['shed']} "
+                        f"shed + {ft['timeout']} timeout + "
+                        f"{ft['rejected']} rejected != {args.scenes}")
+    if ft["exec_failed"] != 0:
+        problems.append(f"{ft['exec_failed']} requests exec_failed "
+                        f"(overload must shed, not break execution)")
+    if not shed:
+        problems.append("2x offered load produced no shed (controller "
+                        "never engaged)")
+    if any(r.error.retry_after_s is None for r in shed):
+        problems.append("a shed response carried no retry_after_s hint")
+    if not ok:
+        problems.append("no request completed at all")
+    elif p95 > args.slo_s:
+        problems.append(f"p95 of completed requests {p95 * 1e3:.0f} ms "
+                        f"blew the {args.slo_s * 1e3:.0f} ms SLO")
+    if problems:
+        print("FAIL: overload contract violated: " + "; ".join(problems),
+              file=sys.stderr)
+        sys.exit(1)
+    print("overload contract held: every request accounted, overload "
+          f"became {ft['shed']} typed sheds with retry hints, completed "
+          "p95 within the SLO")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenes", type=int, default=16,
@@ -393,6 +524,16 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode for --partition: exit nonzero on any "
                          "contract violation instead of just reporting")
+    ap.add_argument("--storm", action="store_true",
+                    help="overload-control smoke: offer 2x the throttled "
+                         "service rate through the SLO-aware controller "
+                         "and assert the shed/latency contract")
+    ap.add_argument("--storm-rate", type=float, default=4.0,
+                    help="chaos-throttled service rate for --storm "
+                         "(micro-batches/s of the storm bucket)")
+    ap.add_argument("--slo-s", type=float, default=2.0,
+                    help="per-request deadline_s and the p95 latency "
+                         "ceiling the --storm contract asserts")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="enable span tracing + flight recorder and "
                          "write the trace stream as schema-validated "
@@ -404,8 +545,14 @@ def main():
     if args.partition and (args.workers or args.inject_faults):
         ap.error("--partition is its own smoke; it takes no --workers "
                  "or --inject-faults")
+    if args.storm and (args.partition or args.workers
+                       or args.inject_faults):
+        ap.error("--storm is its own smoke; it takes no --partition, "
+                 "--workers, or --inject-faults")
     if args.partition:
         return run_partition(args)
+    if args.storm:
+        return run_storm(args)
     if args.kill_worker is not None and args.workers < 2:
         ap.error("--kill-worker needs --workers >= 2 (a survivor to "
                  "replay onto)")

@@ -50,6 +50,9 @@ Canonical serve metric schema (the one source of truth — the README
   gauge    serve_queue_depth{instance}            lazy (set_function)
   gauge    serve_inflight_batches{instance}       lazy (set_function)
   gauge    serve_recovery_seconds{instance}       last failure->recovered
+  gauge    serve_overload_state{instance}         brownout level (0=nominal)
+  gauge    serve_effective_backlog{instance,bucket}  adaptive shed bound
+  gauge    serve_breaker_state{instance,target}   0 closed/1 half-open/2 open
   histo    serve_request_latency_seconds{instance}   OK results only
   histo    serve_error_latency_seconds{instance,code} submit->typed error
   histo    serve_assembly_seconds{instance}       per micro-batch
@@ -92,7 +95,8 @@ SCHEDULER_STATS_KEYS = frozenset({
     "n_submitted", "n_completed", "n_ok", "queue_depth", "in_flight",
     "padding_overhead", "mapping_cache", "assembly_cache",
     "assembly_time_s", "assembly_time_per_batch_s", "deadline_flushes",
-    "buckets", "max_batch", "max_batch_overrides", "pipeline_depth",
+    "buckets", "max_batch", "max_batch_overrides",
+    "scheduler_max_backlog", "pipeline_depth",
     "n_devices", "compiles", "latency_avg_s", "latency_quantiles_s",
     "faults", "watchdog", "closed",
 })
@@ -107,7 +111,7 @@ ROUTER_STATS_KEYS = frozenset({
     "n_workers", "n_live", "workers", "n_submitted", "n_completed",
     "n_ok", "routed_incomplete", "latency_avg_s", "latency_quantiles_s",
     "pool_cache", "faults", "liveness", "max_replays", "max_backlog",
-    "closed",
+    "router_max_backlog", "closed",
 })
 ROUTER_FAULT_KEYS = frozenset({
     "rejected", "shed", "timeout", "exec_failed", "failovers",

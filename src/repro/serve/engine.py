@@ -265,7 +265,8 @@ class PointCloudEngine:
                 f"chunks failed — {detail}")
         return jnp.asarray(preds), hit
 
-    def segment_batch(self, coords, mask, feats, on_error: str = "raise"):
+    def segment_batch(self, coords, mask, feats, on_error: str = "raise",
+                      priority: int = 0):
         """(B, N, 1+D) scenes -> ((B, N) class ids, mapping_cache_hit).
 
         Served through the internal `ServeScheduler`: each scene is
@@ -287,6 +288,11 @@ class PointCloudEngine:
         The scheduler is shared (`self.scheduler()`): scenes another
         caller queued are flushed along with this batch, but their
         results stay drainable — only this call's requests are taken.
+
+        `priority` is forwarded to every scene's `submit`: higher values
+        win the scheduler's priority lanes under overload, and lanes
+        below the brownout shed threshold are rejected at admission
+        (surfacing here through the normal error taxonomy).
         """
         if on_error not in ("raise", "partial"):
             raise ValueError(f"on_error must be 'raise' or 'partial', "
@@ -298,7 +304,8 @@ class PointCloudEngine:
         # overflow raises before any scene is admitted
         self.ladder.bucket_for(coords.shape[1])
         sched = self.scheduler()
-        rids = [sched.submit(coords[b], feats[b], mask[b])
+        rids = [sched.submit(coords[b], feats[b], mask[b],
+                             priority=priority)
                 for b in range(coords.shape[0])]
         sched.flush()
         by_rid = sched.take(rids)

@@ -48,6 +48,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Mapping
 
 import numpy as np
@@ -76,11 +77,16 @@ MALFORMED = "malformed"
 class ServeError:
     """Typed failure a `ServeResult` carries instead of predictions.
     `detail` refines `rejected` results (`oversized` vs `malformed`);
-    None elsewhere."""
+    None elsewhere.  `retry_after_s` is the backpressure hint on `shed`
+    and `timeout` results: the estimated seconds until this bucket has
+    drained enough that a resubmit would be admitted (computed from the
+    observed service rate when an `OverloadController` is attached,
+    None when no estimate exists)."""
 
     code: str                   # one of ERROR_CODES
     message: str
     detail: str | None = None
+    retry_after_s: float | None = None
 
     def __post_init__(self):
         if self.code not in ERROR_CODES:
@@ -260,6 +266,17 @@ class FaultPlan:
                       exactly what a wedged device wait looks like — the
                       router's liveness policy must catch it by missed
                       heartbeats.  Woken early by `close()`.
+    slow_device     : extra seconds added to *every* dispatch's device
+                      wait — a uniformly degraded device, for overload /
+                      brownout tests where `delay_buckets` (per-bucket)
+                      is too targeted.  Interruptible like the rest.
+    storm_buckets   : {bucket_capacity: dispatches_per_second} — caps
+                      the bucket's dispatch RATE with token-bucket
+                      pacing (each dispatch waits until its slot),
+                      giving the bucket a *deterministic service rate*
+                      so overload tests can offer a known multiple of
+                      capacity.  Distinct from `delay_buckets`, which
+                      adds a fixed delay regardless of arrival rate.
     """
 
     fail_dispatches: frozenset = frozenset()
@@ -270,6 +287,9 @@ class FaultPlan:
     kill_workers: Mapping[int, int] = dataclasses.field(
         default_factory=dict)
     hang_workers: Mapping[int, float] = dataclasses.field(
+        default_factory=dict)
+    slow_device: float = 0.0
+    storm_buckets: Mapping[int, float] = dataclasses.field(
         default_factory=dict)
 
     def __post_init__(self):
@@ -282,9 +302,16 @@ class FaultPlan:
                              for w, s in dict(self.kill_workers).items()}
         self.hang_workers = {int(w): float(s)
                              for w, s in dict(self.hang_workers).items()}
+        self.slow_device = float(self.slow_device)
+        self.storm_buckets = {int(c): float(r)
+                              for c, r in dict(self.storm_buckets).items()}
+        if any(r <= 0 for r in self.storm_buckets.values()):
+            raise ValueError("storm_buckets rates must be > 0 "
+                             "dispatches/second")
         self._lock = threading.Lock()
         self._wake = threading.Event()
         self._hung: set = set()
+        self._storm_next: dict[int, float] = {}     # cap -> next slot time
         # seam-firing counters live in a private registry (one family,
         # labeled per seam) — stats() below is the legacy view over it
         self._mx = MX.MetricsRegistry()
@@ -296,6 +323,8 @@ class FaultPlan:
         self._c_delays = fam.labels("delay")
         self._c_kills = fam.labels("kill")
         self._c_hangs = fam.labels("hang")
+        self._c_slows = fam.labels("slow")
+        self._c_storms = fam.labels("storm")
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -338,6 +367,22 @@ class FaultPlan:
             with self._lock:
                 self._c_delays.inc()
             self._wake.wait(delay)
+        if self.slow_device > 0:
+            with self._lock:
+                self._c_slows.inc()
+            self._wake.wait(self.slow_device)
+        rate = self.storm_buckets.get(int(cap))
+        if rate is not None:
+            # token-bucket pacing: each dispatch claims the next slot on
+            # a 1/rate grid, so the bucket's service rate is exactly
+            # `rate` under saturation regardless of arrival pattern
+            now = time.monotonic()
+            with self._lock:
+                slot = max(self._storm_next.get(int(cap), now), now)
+                self._storm_next[int(cap)] = slot + 1.0 / rate
+                self._c_storms.inc()
+            if slot > now:
+                self._wake.wait(slot - now)
         poisoned = self.poison_rids.intersection(int(r) for r in rids)
         if int(dispatch_id) in self.fail_dispatches or poisoned:
             with self._lock:
@@ -386,4 +431,6 @@ class FaultPlan:
                     "failures_injected": self._c_injected.value,
                     "delays_injected": self._c_delays.value,
                     "workers_killed": self._c_kills.value,
-                    "workers_hung": self._c_hangs.value}
+                    "workers_hung": self._c_hangs.value,
+                    "slowdowns_injected": self._c_slows.value,
+                    "storm_paced": self._c_storms.value}

@@ -72,6 +72,7 @@ from repro.launch import fault_tolerance as FT
 from repro.obs import Observability
 from repro.serve import buckets as BK
 from repro.serve import faults as FLT
+from repro.serve import overload as OV
 from repro.serve.faults import ServeError
 from repro.serve.scheduler import ServeResult, ServeScheduler
 
@@ -139,6 +140,7 @@ class _Routed:
     t_submit: float
     worker: "_Worker"
     attempts: int = 0           # completed-worker losses survived
+    priority: int = 0           # lane (forwarded to the worker scheduler)
 
 
 class _Worker:
@@ -257,11 +259,13 @@ class _Worker:
                             else None
                         flush = self._flush_req if item is None else False
                     if item is not None:
-                        rrid, coords, feats, mask, deadline, tid = item
+                        (rrid, coords, feats, mask, deadline, priority,
+                         tid) = item
                         remaining = None if deadline is None else \
                             max(0.0, deadline - time.monotonic())
                         local = self.sched.submit(coords, feats, mask,
                                                   deadline_s=remaining,
+                                                  priority=priority,
                                                   trace_id=tid)
                         with self.cv:
                             self.local_rrid[local] = rrid
@@ -308,10 +312,27 @@ class ServeRouter:
     max_replays      : worker losses one request survives before it
                        completes `exec_failed` (the router-level
                        analogue of the scheduler's `max_retries`).
-    max_backlog      : per-worker bound on outstanding (routed,
-                       incomplete) requests; a submit finding every live
-                       worker at the bound completes with a `shed`
-                       result.  None = unbounded.
+    max_backlog      : PER-WORKER bound on outstanding (routed,
+                       incomplete) requests — scenes assigned to one
+                       worker across all of its buckets; a submit
+                       finding every live worker at the bound completes
+                       with a `shed` result.  None = unbounded.  (The
+                       scheduler's same-named knob is PER-BUCKET;
+                       `stats()` surfaces this one as
+                       `router_max_backlog`.)
+    overload         : `overload.OverloadPolicy` (or True for the
+                       defaults) — every worker's scheduler builds its
+                       own `OverloadController` from it (adaptive
+                       shedding, priority lanes, bucket breakers,
+                       brownout), and the router adds PER-WORKER
+                       circuit breakers: a worker producing
+                       `exec_failed` results trips its breaker and the
+                       rendezvous ranking routes around it until a
+                       half-open probe succeeds.  Shed results carry an
+                       aggregated `retry_after_s` hint (the minimum
+                       over the live workers' drain estimates).  None
+                       (default) keeps routing bit-identical to the
+                       uncontrolled router.
     fault_plan       : `serve.faults.FaultPlan` chaos seam — worker
                        kills/hangs fire in the worker loops; the
                        scheduler-level seams (dispatch failures, bucket
@@ -333,6 +354,7 @@ class ServeRouter:
                  liveness: LivenessPolicy | None = None,
                  max_replays: int = DEFAULT_MAX_REPLAYS,
                  max_backlog: int | None = None,
+                 overload=None,
                  fault_plan: FLT.FaultPlan | None = None,
                  obs: Observability | None = None,
                  **scheduler_kwargs):
@@ -343,14 +365,24 @@ class ServeRouter:
             raise ValueError("max_replays must be >= 0")
         if max_backlog is not None and max_backlog < 1:
             raise ValueError("max_backlog must be >= 1 (or None)")
+        if overload is True:
+            overload = OV.OverloadPolicy()
+        if overload is not None and \
+                not isinstance(overload, OV.OverloadPolicy):
+            raise TypeError(
+                "ServeRouter overload= takes None/True/OverloadPolicy "
+                "(each worker scheduler builds its own controller)")
         self.engine_factory = engine_factory
         self.liveness = liveness if liveness is not None \
             else LivenessPolicy()
         self.max_replays = int(max_replays)
         self.max_backlog = max_backlog
+        self.overload = overload
         self.fault_plan = fault_plan
         self._sched_kwargs = dict(scheduler_kwargs)
         self._sched_kwargs.setdefault("fault_plan", fault_plan)
+        if overload is not None:
+            self._sched_kwargs.setdefault("overload", overload)
 
         self._lock = threading.RLock()
         self._done = threading.Condition(self._lock)
@@ -406,6 +438,13 @@ class ServeRouter:
             "failover -> last victim resolved", ("instance",)).labels(inst)
         self._recovering: set[int] = set()
         self._t_failover: float | None = None
+        # per-worker circuit breakers (overload control only — the
+        # disabled path registers nothing and routes identically)
+        self._breakers: dict[str, OV.CircuitBreaker] = {}
+        self._fam_breaker = reg.gauge(
+            "serve_breaker_state",
+            "circuit breaker state (0 closed / 1 half-open / 2 open)",
+            ("instance", "target")) if self.overload is not None else None
 
         for _ in range(n_workers):
             self._add_worker_locked()
@@ -426,6 +465,10 @@ class ServeRouter:
         w = _Worker(self, name, ordinal, self.engine_factory(),
                     dict(self._sched_kwargs, obs=self.obs, instance=name))
         self._workers[name] = w
+        if self.overload is not None:
+            self._breakers[name] = OV.CircuitBreaker(
+                self.overload.breaker, name=f"worker:{name}",
+                gauge=self._fam_breaker.labels("router", f"worker:{name}"))
         return w
 
     def add_worker(self, name: str | None = None) -> str:
@@ -492,8 +535,11 @@ class ServeRouter:
             return None
 
     def _route_locked(self, key: bytes) -> "_Worker | None":
-        """Rendezvous-ranked live worker with backlog headroom, else
-        None (no live workers, or every one saturated)."""
+        """Rendezvous-ranked live worker with backlog headroom and a
+        non-open circuit breaker, else None (no live workers, every one
+        saturated, or every one circuit-broken).  The backlog check runs
+        BEFORE the breaker check so a saturated worker never consumes a
+        half-open probe slot it cannot serve."""
         live = [w for w in self._workers.values() if w.state == LIVE]
         if not live:
             return None
@@ -501,8 +547,14 @@ class ServeRouter:
                         key=lambda w: _rendezvous_score(key, w.name),
                         reverse=True)
         for w in ranked:
-            if self.max_backlog is None or w.assigned < self.max_backlog:
-                return w
+            if self.max_backlog is not None and \
+                    w.assigned >= self.max_backlog:
+                continue
+            br = self._breakers.get(w.name)
+            if br is not None and br.state != OV.CLOSED \
+                    and not br.allow():
+                continue
+            return w
         return None
 
     def preview(self, coords, mask=None) -> str | None:
@@ -517,16 +569,40 @@ class ServeRouter:
             w = self._route_locked(key)
             return w.name if w is not None else None
 
+    def _retry_hint_locked(self) -> float | None:
+        """Aggregated backpressure hint for a pool-level shed: the
+        minimum over the live workers' drain estimates (the first
+        worker to free up is when a resubmit can land) and any tripped
+        breaker's next probe slot.  None without overload control."""
+        if self.overload is None:
+            return None
+        hints = []
+        for w in self._workers.values():
+            if w.state != LIVE:
+                continue
+            h = w.sched.retry_after_hint()
+            if h is not None:
+                hints.append(h)
+            br = self._breakers.get(w.name)
+            if br is not None and br.state != OV.CLOSED:
+                hints.append(br.retry_after())
+        return min(hints) if hints else \
+            self.overload.slo.deadline_headroom_s
+
     def submit(self, coords, feats, mask=None,
-               deadline_s: float | None = None) -> int:
+               deadline_s: float | None = None,
+               priority: int = 0) -> int:
         """Admit one scene; returns its router request id — ALWAYS.
 
         The scene is digested and rendezvous-routed to its affinity
-        worker (falling past saturated workers to the next-ranked one);
-        a pool with zero live workers, or every worker at `max_backlog`,
-        completes the request with a `shed` result.  Validation itself
-        happens in the worker's scheduler — malformed scenes come back
-        as `rejected` results exactly as on the bare scheduler."""
+        worker (falling past saturated or circuit-broken workers to the
+        next-ranked one); a pool with zero live workers, or every
+        worker at `max_backlog` / circuit-broken, completes the request
+        with a `shed` result (carrying an aggregated `retry_after_s`
+        hint under overload control).  Validation itself happens in the
+        worker's scheduler — malformed scenes come back as `rejected`
+        results exactly as on the bare scheduler.  `priority` rides
+        along to the worker scheduler's lane ordering."""
         t_submit = time.monotonic()
         key = self._affinity_key(coords, mask)
         try:
@@ -550,24 +626,39 @@ class ServeRouter:
             salt = key if key is not None else f"rrid:{rrid}".encode()
             w = self._route_locked(salt)
             if w is None:
-                live = sum(1 for x in self._workers.values()
-                           if x.state == LIVE)
-                msg = "no live workers in the pool" if live == 0 else \
-                    (f"all {live} live workers at the max_backlog "
-                     f"bound ({self.max_backlog} outstanding)")
+                live = [x for x in self._workers.values()
+                        if x.state == LIVE]
+                broken = sum(1 for x in live
+                             if self._breakers.get(x.name) is not None
+                             and self._breakers[x.name].state != OV.CLOSED)
+                if not live:
+                    msg = "no live workers in the pool"
+                elif broken and self.overload is not None:
+                    backlogs = [x.assigned for x in live]
+                    msg = (f"all {len(live)} live workers unavailable: "
+                           f"{broken} circuit-broken, backlogs "
+                           f"{backlogs} vs the max_backlog bound "
+                           f"({self.max_backlog} outstanding per worker)")
+                else:
+                    msg = (f"all {len(live)} live workers at the "
+                           f"max_backlog bound ({self.max_backlog} "
+                           f"outstanding)")
                 self._complete_error_locked(
-                    rrid, n_points, t_submit, ServeError(FLT.SHED, msg))
+                    rrid, n_points, t_submit,
+                    ServeError(FLT.SHED, msg,
+                               retry_after_s=self._retry_hint_locked()))
                 return rrid
             deadline = t_submit + deadline_s \
                 if deadline_s is not None else None
             routed = _Routed(rrid, salt, coords, feats, mask, n_points,
-                             deadline, t_submit, w)
+                             deadline, t_submit, w, priority=int(priority))
             self._routed[rrid] = routed
             if self._tracer is not None:
                 self._tracer.span(tid, "route", t_start=t_submit,
                                   t_end=time.monotonic(), worker=w.name)
             w.assigned += 1
-            w.enqueue((rrid, coords, feats, mask, deadline, tid))
+            w.enqueue((rrid, coords, feats, mask, deadline,
+                       int(priority), tid))
             return rrid
 
     # -- completion --------------------------------------------------------
@@ -627,10 +718,29 @@ class ServeRouter:
         completes exactly once, from its current owner."""
         with self._lock:
             now = time.monotonic()
+            br = self._breakers.get(w.name)
             for rrid, res in pairs:
                 routed = self._routed.get(rrid)
                 if routed is None or routed.worker is not w:
                     continue            # stale: replayed or completed
+                if br is not None:
+                    # exec_failed results count toward the worker's
+                    # breaker window; ok results close a half-open
+                    # probe (shed/timeout are load signals, not worker
+                    # failures — they count toward neither)
+                    if res.error is not None and \
+                            res.error.code == FLT.EXEC_FAILED:
+                        if br.record_failure(now) and \
+                                self._recorder is not None:
+                            self._recorder.record(
+                                "breaker_trip", target=f"worker:{w.name}",
+                                state=br.state, trips=br.n_trips,
+                                instance="router")
+                            self._recorder.dump(
+                                "breaker_trip",
+                                key=("breaker", w.name, br.n_trips))
+                    elif res.error is None:
+                        br.record_success(now)
                 self._complete_locked(routed, dataclasses.replace(
                     res, rid=rrid, latency_s=now - routed.t_submit))
 
@@ -722,7 +832,7 @@ class ServeRouter:
                 self._recorder.record("replay", rrid=r.rrid,
                                       worker=nw.name, instance="router")
             nw.enqueue((r.rrid, r.coords, r.feats, r.mask, r.deadline,
-                        tid))
+                        r.priority, tid))
 
     # -- waiting helpers ---------------------------------------------------
 
@@ -907,5 +1017,9 @@ class ServeRouter:
                 },
                 "max_replays": self.max_replays,
                 "max_backlog": self.max_backlog,
+                # disambiguated alias: the router's bound is PER-WORKER
+                # outstanding scenes (vs the scheduler's per-bucket
+                # scheduler_max_backlog)
+                "router_max_backlog": self.max_backlog,
                 "closed": self._closed,
             }

@@ -87,6 +87,7 @@ from repro.launch import fault_tolerance as FT
 from repro.obs import Observability
 from repro.serve import buckets as BK
 from repro.serve import faults as FLT
+from repro.serve import overload as OV
 from repro.serve.faults import ServeError
 
 DEFAULT_PIPELINE_DEPTH = 2
@@ -109,6 +110,7 @@ class ServeRequest:
     t_submit: float
     key: bytes = None           # pyramid digest (None on the legacy path)
     deadline: float | None = None   # absolute monotonic queue deadline
+    priority: int = 0           # lane: higher dispatches first at flush
 
 
 @dataclasses.dataclass(frozen=True)
@@ -230,11 +232,19 @@ class ServeScheduler:
                              complete with a `rejected` result instead of
                              raising.  False restores the raise-on-bad-
                              input PR-5 behaviour (the bench baseline).
-    max_backlog            : per-bucket bound on outstanding (queued +
+    max_backlog            : PER-BUCKET bound on outstanding (queued +
                              in-flight) scenes; a submit beyond it is
                              shed with a `shed` result.  None = unbounded.
                              A natural setting is
-                             (pipeline_depth + 1) * max_batch.
+                             (pipeline_depth + 1) * max_batch.  (The
+                             router's same-named knob is PER-WORKER —
+                             scenes assigned to one worker across all
+                             buckets; `stats()` surfaces this one as
+                             `scheduler_max_backlog`.)  With an
+                             `overload` controller the EFFECTIVE bound
+                             tightens adaptively to
+                             ceil(service_rate x deadline_headroom)
+                             (never looser than this static bound).
     max_retries            : re-dispatch budget per request after a
                              failed execution (2 isolates one poison
                              scene in a micro-batch of up to 4 via
@@ -254,6 +264,29 @@ class ServeScheduler:
                              baseline).  The wait releases the scheduler
                              lock, so producers keep admitting scenes
                              while a retry backs off.
+    retry_backoff_seed     : seed for the backoff jitter RNG — two
+                             schedulers built with the same seed produce
+                             identical backoff schedules (deterministic
+                             chaos tests).  None (default) keeps the
+                             module-level `random` source.
+    overload               : `overload.OverloadPolicy` (or True for the
+                             defaults, or a pre-built
+                             `OverloadController`) — attaches the
+                             SLO-aware overload controller: adaptive
+                             shedding from the observed service rate,
+                             priority/EDF queue ordering, per-bucket
+                             circuit breakers, and the brownout ladder
+                             (see `serve/overload.py`).  With a
+                             controller, pipeline depth is enforced by
+                             DEFERRING dispatch (full batches queue
+                             until a slot retires — submit never blocks
+                             on a device wait) instead of by the
+                             blocking depth-overflow loop; the queues
+                             that build are what the priority lanes
+                             order and the adaptive bound sheds.  None
+                             (default) keeps every serving path
+                             bit-identical to the uncontrolled
+                             scheduler.
     watchdog_s             : background ticker interval — fires
                              `max_wait_s` deadline flushes, expires
                              per-request deadlines and retires ready
@@ -283,6 +316,8 @@ class ServeScheduler:
                  max_retries: int = DEFAULT_MAX_RETRIES,
                  retry_bisect: bool = True,
                  retry_backoff_s: float = 0.0,
+                 retry_backoff_seed: int | None = None,
+                 overload=None,
                  watchdog_s: float | None = None,
                  fault_plan: FLT.FaultPlan | None = None,
                  obs: Observability | None = None,
@@ -323,6 +358,9 @@ class ServeScheduler:
         self.max_retries = int(max_retries)
         self.retry_bisect = bool(retry_bisect)
         self.retry_backoff_s = float(retry_backoff_s)
+        self._rng = random.Random(retry_backoff_seed) \
+            if retry_backoff_seed is not None else random
+        self.overload = OV.resolve_controller(overload)
         self.fault_plan = fault_plan if fault_plan is not None else \
             getattr(engine, "fault_plan", None)
         # the packed-key budget is only a constraint for the v2 engine
@@ -353,6 +391,7 @@ class ServeScheduler:
         self._coord_dim = None                  # first-seen stream widths
         self._feat_shape = None
         self._has_deadlines = False
+        self._has_priorities = False
         # telemetry: every accumulator is a child of the shared metrics
         # registry (repro.obs), bound once here so the hot path pays one
         # attribute lookup + inc — stats() below is a bit-compatible
@@ -437,8 +476,19 @@ class ServeScheduler:
         self._qspans: dict[int, int] = {}    # rid -> open queue_wait span
         self._wspans: dict[int, int] = {}    # rid -> open device_wait span
 
+        if self.overload is not None:
+            self.overload.bind(self)
+
         if watchdog_s is None:
-            watchdog_s = max_wait_s / 4 if max_wait_s is not None else 0.0
+            if max_wait_s is not None:
+                watchdog_s = max_wait_s / 4
+            elif self.overload is not None:
+                # the controller needs periodic ticks even when nobody
+                # is polling — the estimator and the brownout ladder
+                # both advance on the deadline sweep
+                watchdog_s = self.overload.policy.tick_s
+            else:
+                watchdog_s = 0.0
         self._watchdog = FT.Ticker(
             max(_MIN_WATCHDOG_S, float(watchdog_s)), self._watchdog_tick,
             name="serve-watchdog") if watchdog_s > 0 else None
@@ -487,6 +537,8 @@ class ServeScheduler:
                     self._run_bucket(cap)
             while self._retire_oldest_locked():
                 pass
+            if self.overload is not None:
+                self.overload.close()
 
     def __enter__(self):
         return self
@@ -499,6 +551,7 @@ class ServeScheduler:
 
     def submit(self, coords, feats, mask=None,
                deadline_s: float | None = None,
+               priority: int = 0,
                trace_id: str | None = None) -> int:
         """Admit one scene; returns its request id — ALWAYS.
 
@@ -518,6 +571,15 @@ class ServeScheduler:
         `shed` result.  Thread-safe: padding and digesting happen
         outside the lock, so concurrent producers overlap their
         admission work.
+
+        `priority` (default 0, higher = more urgent) picks the lane:
+        when any nonzero priority has been seen — or an overload
+        controller is attached and deadlines are in play — each
+        micro-batch takes the highest-priority queued scenes first,
+        earliest deadline first within a priority (EDF), FIFO within
+        ties.  Only the queue ORDER changes; per-scene predictions are
+        bit-identical.  Under brownout level 3 the lanes below the
+        policy's `shed_below_priority` are shed at admission.
 
         `trace_id` attaches this request's spans to an EXISTING trace
         (a router began it before enqueueing); the scheduler then never
@@ -562,10 +624,20 @@ class ServeScheduler:
                 err = ServeError(FLT.REJECTED, "scheduler is closed")
             if err is None and self.max_backlog is not None and \
                     self._outstanding.get(cap, 0) >= self.max_backlog:
+                ov = self.overload
+                rate = ov.service_rate(cap) if ov is not None else None
                 err = ServeError(
                     FLT.SHED,
                     f"bucket {cap} backlog at the max_backlog bound "
-                    f"({self.max_backlog} outstanding scenes)")
+                    f"({self.max_backlog} outstanding scenes"
+                    + (f"; observed service rate {rate:.1f} scenes/s"
+                       if rate is not None else "") + ")",
+                    retry_after_s=ov.retry_after(
+                        cap, self._outstanding.get(cap, 0))
+                    if ov is not None else None)
+            if err is None and self.overload is not None:
+                err = self.overload.check_admission_locked(
+                    cap, self._outstanding.get(cap, 0), priority)
             tr = self._tracer
             if tr is not None:
                 tid = trace_id if trace_id is not None else \
@@ -591,13 +663,25 @@ class ServeScheduler:
                 self._coord_dim = int(coords.shape[1])
                 self._feat_shape = tuple(np.asarray(feats).shape[1:])
             req = ServeRequest(rid, c, m, f, n, n_valid, cap,
-                               t_submit, key, deadline)
+                               t_submit, key, deadline, int(priority))
             if deadline is not None:
                 self._has_deadlines = True
+            if priority:
+                self._has_priorities = True
             self._outstanding[cap] = self._outstanding.get(cap, 0) + 1
             self._queues.setdefault(cap, deque()).append(req)
             if len(self._queues[cap]) >= self.max_batch_for(cap):
-                self._run_bucket(cap)
+                if self.overload is None or self.pipeline_depth == 0 \
+                        or not self._bucket_at_depth_locked(cap):
+                    self._run_bucket(cap)
+                # else: DEFERRED dispatch (controller mode) — the bucket
+                # is at its pipeline depth, so the batch stays queued
+                # until a slot retires (_pump_locked).  This is what
+                # gives the priority/EDF lanes something to order and
+                # the adaptive bound a real backlog to measure; the
+                # uncontrolled scheduler keeps the PR-6 behaviour of
+                # dispatching immediately and blocking in the depth
+                # overflow loop instead.
             self._check_deadlines_locked()
             return rid
 
@@ -610,6 +694,9 @@ class ServeScheduler:
             self._check_deadlines_locked()
             while self._retire_oldest_locked(only_ready=True):
                 pass
+            if self._pump_locked():
+                while self._retire_oldest_locked(only_ready=True):
+                    pass
             out = list(self._completed)
             self._completed.clear()
             return out
@@ -633,8 +720,11 @@ class ServeScheduler:
         submission order — whichever bucket filled first ran first);
         waits for in-flight micro-batches."""
         with self._lock:
-            while self._retire_oldest_locked():
-                pass
+            while True:
+                while self._retire_oldest_locked():
+                    pass
+                if not self._pump_locked():
+                    break
             out = list(self._completed)
             self._completed.clear()
             return out
@@ -645,8 +735,11 @@ class ServeScheduler:
         scheduler without discarding another caller's results).  Waits
         for in-flight micro-batches (the rids may be on one)."""
         with self._lock:
-            while self._retire_oldest_locked():
-                pass
+            while True:
+                while self._retire_oldest_locked():
+                    pass
+                if not self._pump_locked():
+                    break
             want = set(rids)
             out, keep = {}, deque()
             for r in self._completed:
@@ -787,12 +880,62 @@ class ServeScheduler:
         feats_b = jnp.asarray(np.stack([r.feats for r in reqs]))
         return hits, (levels_b, coords_b, mask_b, feats_b)
 
+    def _bucket_at_depth_locked(self, cap: int) -> bool:
+        """Is this bucket's in-flight slot count at its pipeline depth?
+        (The same bound the uncontrolled depth-overflow loop enforces by
+        blocking — controller mode enforces it by deferring dispatch.)"""
+        return sum(1 for slot in self._inflight if slot.cap == cap) \
+            > self.pipeline_depth
+
+    def _pump_locked(self) -> int:
+        """Dispatch deferred full batches that now fit their bucket's
+        pipeline depth (controller mode only — without a controller
+        submit never defers).  Returns how many scenes were dispatched;
+        callers that just retired slots loop until this returns 0."""
+        if self.overload is None or self.pipeline_depth == 0:
+            return 0
+        ran = 0
+        for cap in list(self._queues):
+            q = self._queues[cap]
+            while len(q) >= self.max_batch_for(cap) and \
+                    not self._bucket_at_depth_locked(cap):
+                ran += self._run_bucket(cap)
+        return ran
+
+    def _lane_order_enabled(self) -> bool:
+        """Priority/EDF queue ordering is live once any nonzero
+        priority has been submitted, or an overload controller is
+        attached and deadlines are in play.  Plain FIFO streams (the
+        PR-9 behaviour) never enter the reorder path — bit-identical
+        dispatch composition."""
+        return self._has_priorities or \
+            (self.overload is not None and self._has_deadlines)
+
     def _run_bucket(self, cap: int) -> int:
         """Pop up to max_batch queued scenes and dispatch them (caller
-        holds the lock)."""
+        holds the lock).  With priority lanes active the pop takes the
+        highest-priority scenes first, earliest deadline first within a
+        priority (EDF), FIFO within ties — the micro-batch SHAPE and
+        each scene's predictions are unchanged, only which queued
+        scenes go first."""
         q = self._queues[cap]
         mb = self.max_batch_for(cap)
-        reqs = [q.popleft() for _ in range(min(mb, len(q)))]
+        take = min(mb, len(q))
+        if take > 1 and len(q) > take and self._lane_order_enabled():
+            items = list(q)
+            chosen = sorted(
+                range(len(items)),
+                key=lambda i: (-items[i].priority,
+                               items[i].deadline
+                               if items[i].deadline is not None
+                               else math.inf, i))[:take]
+            picked = set(chosen)
+            reqs = [items[i] for i in sorted(picked)]
+            q.clear()
+            q.extend(items[i] for i in range(len(items))
+                     if i not in picked)
+        else:
+            reqs = [q.popleft() for _ in range(take)]
         if not reqs:
             return 0
         return self._dispatch(reqs, cap, retries=0)
@@ -857,13 +1000,19 @@ class ServeScheduler:
         if self.pipeline_depth == 0:
             while self._retire_oldest_locked():
                 pass
-        else:
+        elif self.overload is None:
             # double buffering: once this bucket exceeds its depth, pay
             # for the FIFO head (possibly an older bucket's slot — see
             # _retire_oldest_locked) until the bucket is back in budget
             while sum(1 for slot in self._inflight if slot.cap == cap) \
                     > self.pipeline_depth:
                 self._retire_oldest_locked()
+        # else: controller mode bounds depth at ADMISSION (deferred
+        # dispatch in submit) instead of blocking here — retirement
+        # belongs to poll()/flush()/take()/the watchdog, so submit never
+        # sits in a device wait and the deferral decision is
+        # deterministic (only a deadline flush can transiently exceed
+        # the depth)
         return n_real
 
     def _trace_dispatch(self, reqs, did: int, cap: int, retries: int,
@@ -921,6 +1070,8 @@ class ServeScheduler:
         """
         self._c_failed_dispatches.inc()
         self._last_failure_t = time.monotonic()
+        if self.overload is not None:
+            self.overload.record_dispatch_failure(slot.cap)
         if self._tracer is not None:
             for r in slot.reqs:
                 tid_owned = self._rid_trace.get(r.rid)
@@ -973,7 +1124,7 @@ class ServeScheduler:
         if self.retry_backoff_s <= 0 or self._closed:
             return
         delay = self.retry_backoff_s * (2 ** generation) \
-            * (0.5 + random.random())
+            * (0.5 + self._rng.random())
         self._c_backoff.inc(delay)
         self._lock.release()
         try:
@@ -1040,6 +1191,9 @@ class ServeScheduler:
         if self._last_failure_t is not None:
             self._g_recovery.set(t_done - self._last_failure_t)
             self._last_failure_t = None
+        if self.overload is not None:
+            self.overload.record_dispatch_success(slot.cap,
+                                                  len(slot.reqs))
         tr = self._tracer
         for i, r in enumerate(slot.reqs):
             lat = t_done - r.t_submit
@@ -1127,7 +1281,10 @@ class ServeScheduler:
                             ServeError(
                                 FLT.TIMEOUT,
                                 f"deadline_s exceeded after "
-                                f"{now - r.t_submit:.3f}s in queue"))
+                                f"{now - r.t_submit:.3f}s in queue",
+                                retry_after_s=self.overload.retry_after(
+                                    cap, self._outstanding.get(cap, 0))
+                                if self.overload is not None else None))
                     else:
                         keep.append(r)
                 self._queues[cap] = keep
@@ -1141,7 +1298,13 @@ class ServeScheduler:
         micro-batch executes once its oldest queued request exceeds the
         batching deadline.  A WATCHDOG-fired flush also snapshots the
         flight recorder: nobody was polling, so the ring around the
-        stall is the evidence worth keeping."""
+        stall is the evidence worth keeping.  The overload controller
+        ticks here too (rate re-estimation + brownout ladder) — this
+        sweep runs from submit()/poll() and the watchdog, so the
+        control loop advances with traffic and on idle schedulers
+        alike."""
+        if self.overload is not None:
+            self.overload.maybe_tick()
         self._expire_overdue_locked()
         if self.max_wait_s is None:
             return
@@ -1174,15 +1337,36 @@ class ServeScheduler:
             self._check_deadlines_locked(from_watchdog=True)
             while self._retire_oldest_locked(only_ready=True):
                 pass
+            if self._pump_locked():
+                while self._retire_oldest_locked(only_ready=True):
+                    pass
 
     # -- telemetry --------------------------------------------------------
+
+    def service_rate(self, cap: int) -> float | None:
+        """Observed EWMA service rate (scenes/s) for one bucket — None
+        without an overload controller or before it has an estimate."""
+        with self._lock:
+            return self.overload.service_rate(cap) \
+                if self.overload is not None else None
+
+    def retry_after_hint(self) -> float | None:
+        """Aggregate backpressure hint: estimated seconds until this
+        scheduler's outstanding work drains at the observed completion
+        rate (what a router aggregates across workers for a pool-level
+        shed).  None without an overload controller."""
+        with self._lock:
+            return self.overload.retry_after_hint() \
+                if self.overload is not None else None
 
     def stats(self) -> dict:
         """Serving telemetry: padding overhead, mapping + assembly cache
         hit rates, assembly time, per-bucket occupancy, deadline flushes,
         pipeline state, compile counts, latency, and the fault counters
         (rejected / shed / timeout / exec_failed, failed dispatches,
-        retries, last failure->recovery time)."""
+        retries, last failure->recovery time).  `scheduler_max_backlog`
+        is the PER-BUCKET admission bound (the router's per-worker bound
+        surfaces as `router_max_backlog` in ITS stats())."""
         with self._lock:
             buckets = {}
             for cap, (m_scenes, m_batches, m_dummies) in \
@@ -1219,6 +1403,7 @@ class ServeScheduler:
                 "buckets": buckets,
                 "max_batch": self.max_batch,
                 "max_batch_overrides": dict(self.max_batch_overrides),
+                "scheduler_max_backlog": self.max_backlog,
                 "pipeline_depth": self.pipeline_depth,
                 "n_devices": (int(np.prod(list(self.mesh.shape.values())))
                               if self.mesh is not None else 1),

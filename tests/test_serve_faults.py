@@ -154,7 +154,8 @@ def test_fault_plan_seams():
         plan.check_wait(5, 128, [6, 7])         # poisoned rid
     assert plan.stats() == {"submits_seen": 2, "scenes_corrupted": 1,
                             "failures_injected": 2, "delays_injected": 1,
-                            "workers_killed": 0, "workers_hung": 0}
+                            "workers_killed": 0, "workers_hung": 0,
+                            "slowdowns_injected": 0, "storm_paced": 0}
 
 
 def test_fault_plan_worker_seams():
